@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: timing, power, CSV emission.
+
+Benchmarks measure REAL wall-time throughput of reduced-config models on
+this host (the CARAML "hardware under test" role), with jpwr-style energy:
+RAPL counters when the host exposes them, otherwise the analytic TPU power
+model clearly labeled as modeled. Full-scale TPU numbers live in the
+dry-run/roofline artifacts, not here.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.power.ctxmgr import get_power
+from repro.power.methods import RaplPower, SyntheticPower, TPUModelPower
+
+
+def pick_power_methods():
+    rapl = RaplPower()
+    if rapl.available():
+        return [rapl], "rapl"
+    return [TPUModelPower(n_devices=1, utilization_fn=lambda: 1.0)], "tpu_model"
+
+
+def time_step(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+              measure_power: bool = True, **kw):
+    """Returns (seconds_per_call, energy_wh, power_source)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    methods, source = pick_power_methods() if measure_power else ([], "none")
+    t0 = time.perf_counter()
+    if methods:
+        with get_power(methods, interval_ms=20) as scope:
+            for _ in range(iters):
+                out = fn(*args, **kw)
+            jax.block_until_ready(out)
+        energy = scope.total_energy_wh() / iters
+    else:
+        for _ in range(iters):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        energy = 0.0
+    dt = (time.perf_counter() - t0) / iters
+    return dt, energy, source
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The required ``name,us_per_call,derived`` CSV line."""
+    print(f"{name},{us_per_call:.1f},{derived}")

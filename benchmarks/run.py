@@ -1,0 +1,46 @@
+"""Benchmark driver: one harness per paper table/figure.
+
+Each benchmark runs in its own subprocess so multi-device cases (pipeline
+parallelism, DP heatmaps) can force their own host-platform device count
+without affecting the others. Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+BENCHES = [
+    # (module, paper analog, forced device count)
+    ("benchmarks.llm_throughput", "Fig. 2 (LLM tokens/s + energy)", 1),
+    ("benchmarks.resnet50_bench", "Fig. 3/Table III (ResNet50)", 1),
+    ("benchmarks.ipu_gpt", "Table II (pipeline-parallel GPT-117M)", 4),
+    ("benchmarks.heatmap", "Fig. 4 (dp x batch heatmap)", 8),
+    ("benchmarks.kernels_bench", "kernel microbench", 1),
+    ("benchmarks.roofline_table", "par.Roofline table", 1),
+]
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parents[1]
+    failures = []
+    for mod, desc, ndev in BENCHES:
+        print(f"\n###### {mod} — {desc} ######", flush=True)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = f"{root}/src:{root}"
+        if ndev > 1:
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                                f" --xla_force_host_platform_device_count={ndev}")
+        proc = subprocess.run([sys.executable, "-m", mod], env=env,
+                              cwd=root, timeout=3600)
+        if proc.returncode != 0:
+            failures.append(mod)
+            print(f"FAILED: {mod}", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

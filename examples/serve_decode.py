@@ -1,0 +1,37 @@
+"""Batched serving example: prefill + continuous greedy decode with KV
+caches, across three architecture families (dense GQA, SSM, MoE) —
+the ``serve_step`` the decode_* dry-run shapes lower, runnable end to end.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import synthetic_tokens
+from repro.models import lm
+from repro.serve.engine import BatchedServer
+
+
+def main():
+    for arch in ("llama3.2-3b", "mamba2-1.3b", "granite-moe-3b-a800m"):
+        c = get_config(arch).reduced()
+        params = lm.init(jax.random.key(0), c)
+        server = BatchedServer(c, params, max_len=24)
+        prompts = jnp.asarray(synthetic_tokens(4, 32, c.vocab)[:, :32])
+        res = server.generate(prompts, 16)
+        assert res.tokens.shape == (4, 16)
+        assert bool(jnp.all(res.tokens >= 0))
+        print(f"{arch:24s} prefill {res.prefill_s * 1e3:7.1f} ms | "
+              f"decode {res.decode_s * 1e3:7.1f} ms | "
+              f"{res.decode_tokens_per_s:8,.0f} tok/s | "
+              f"sample: {res.tokens[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

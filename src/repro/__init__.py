@@ -1,0 +1,3 @@
+"""CARAML-JAX: TPU-native reproduction of the CARAML benchmark suite
+(John et al., 2024) as a production multi-pod JAX framework."""
+__version__ = "1.0.0"

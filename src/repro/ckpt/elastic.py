@@ -1,0 +1,62 @@
+"""Elastic scaling: reshape the training job onto a different mesh.
+
+On failure of a pod/slice, the controller restarts with fewer (or more)
+devices; checkpoints are mesh-agnostic (host arrays + manifest), so
+restore() with the new mesh's shardings is all that's needed. This module
+derives the rescale plan and validates batch divisibility.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.parallel import sharding as sh
+
+
+@dataclass
+class RescalePlan:
+    old_shape: tuple
+    new_shape: tuple
+    new_axes: tuple
+    global_batch: int
+    note: str
+
+
+def plan_rescale(c: ModelConfig, shape: ShapeConfig, old_shape: tuple,
+                 lost_devices: int) -> RescalePlan:
+    """Shrink the data axis to the largest feasible size after losing
+    ``lost_devices`` chips; keep the model axis (TP degree is a property
+    of the model fit, not of cluster health)."""
+    old_total = 1
+    for s in old_shape:
+        old_total *= s
+    model = old_shape[-1]
+    avail = old_total - lost_devices
+    new_data = avail // model
+    # batch must stay divisible by the data axis
+    while new_data > 1 and shape.global_batch % new_data != 0:
+        new_data -= 1
+    if new_data < 1:
+        raise ValueError("not enough devices for TP degree")
+    return RescalePlan(
+        old_shape=tuple(old_shape),
+        new_shape=(new_data, model),
+        new_axes=("data", "model"),
+        global_batch=shape.global_batch,
+        note=f"lost {lost_devices} chips -> data axis {new_data}",
+    )
+
+
+def reshard_state(state, c: ModelConfig, plan: RescalePlan,
+                  shape: ShapeConfig):
+    """Build the new mesh + shardings and device_put the state onto it."""
+    mesh = make_mesh(plan.new_shape, plan.new_axes)
+    p = sh.make_plan(c, mesh, shape)
+    params, opt_state = state
+    param_sh = sh.param_shardings(c, p, params)
+    new_params = jax.device_put(params, param_sh)
+    return mesh, p, (new_params, opt_state)

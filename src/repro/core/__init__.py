@@ -1,0 +1,14 @@
+"""CARAML core: the paper's primary contribution — a compact, automated,
+reproducible benchmark harness (JUBE analog) with jpwr-style energy
+measurement. Substrate subsystems live in sibling subpackages."""
+from repro.core.metrics import Throughput, images_per_s, mfu, tokens_per_s
+from repro.core.params import Space, batch_at_least_dp, divisible_batch
+from repro.core.results import heatmap, save_results, table
+from repro.core.runner import Runner, StragglerWatchdog
+from repro.core.suite import BenchmarkSuite, Step
+
+__all__ = [
+    "Throughput", "images_per_s", "mfu", "tokens_per_s", "Space",
+    "batch_at_least_dp", "divisible_batch", "heatmap", "save_results",
+    "table", "Runner", "StragglerWatchdog", "BenchmarkSuite", "Step",
+]

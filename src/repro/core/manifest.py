@@ -1,0 +1,34 @@
+"""Reproducibility manifest — CARAML's automation records exactly what ran."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import platform
+import sys
+import time
+
+
+def build_manifest(extra: dict | None = None) -> dict:
+    import jax
+    m = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "platform": platform.platform(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "argv": sys.argv,
+    }
+    if extra:
+        m.update(extra)
+    return m
+
+
+def write_manifest(out_dir, extra: dict | None = None) -> dict:
+    m = build_manifest(extra)
+    p = pathlib.Path(out_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / "manifest.json").write_text(json.dumps(m, indent=1, default=str))
+    return m

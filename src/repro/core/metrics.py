@@ -1,0 +1,46 @@
+"""Figures of merit (the paper's metrics, Section IV).
+
+  tokens/s  = global_batch * seq_len / iteration_time     (LLM)
+  images/s  = global_batch / iteration_time               (ResNet50)
+  tokens/Wh, images/Wh — energy-efficiency metrics
+  MFU       = model_flops / (time * chips * peak)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.roofline.analysis import PEAK_FLOPS_BF16
+
+
+@dataclass
+class Throughput:
+    name: str
+    items_per_s: float          # tokens/s or images/s
+    unit: str                   # "tokens" | "images"
+    iter_time_s: float
+    energy_wh: float = 0.0      # total energy over the measured window
+    duration_s: float = 0.0
+
+    @property
+    def items_per_wh(self) -> float:
+        if self.energy_wh <= 0:
+            return 0.0
+        return self.items_per_s * self.duration_s / self.energy_wh
+
+
+def tokens_per_s(global_batch: int, seq_len: int, iter_time_s: float) -> float:
+    return global_batch * seq_len / max(iter_time_s, 1e-12)
+
+
+def tokens_per_s_ipu(global_batch_tokens: int, iter_time_s: float) -> float:
+    """Graphcore variant: global_batch given in tokens (paper Sec III-A1)."""
+    return global_batch_tokens / max(iter_time_s, 1e-12)
+
+
+def images_per_s(global_batch: int, iter_time_s: float) -> float:
+    return global_batch / max(iter_time_s, 1e-12)
+
+
+def mfu(model_flops_per_step: float, iter_time_s: float, n_chips: int,
+        peak: float = PEAK_FLOPS_BF16) -> float:
+    return model_flops_per_step / (max(iter_time_s, 1e-12) * n_chips * peak)

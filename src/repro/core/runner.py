@@ -1,0 +1,109 @@
+"""Suite runner: executes benchmark points with power measurement,
+retries, straggler detection, and incremental result persistence.
+
+This is the JUBE runtime analog: it expands the parameter space, runs each
+(point x step), wraps execution in the jpwr-style get_power context, and
+renders the final result table.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.manifest import write_manifest
+from repro.core.results import save_results, table
+from repro.core.suite import BenchmarkSuite, Step
+from repro.power.ctxmgr import get_power
+from repro.power.methods import PowerMethod
+
+
+@dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor: flags steps slower than mean + k*std.
+
+    At cluster scale this drives the mitigation policy (skip shard /
+    checkpoint-and-rebalance); here it records events for the report and
+    is unit-tested with simulated stragglers.
+    """
+    k: float = 3.0
+    alpha: float = 0.2
+    warmup: int = 3
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    events: list = field(default_factory=list)
+
+    def observe(self, step_idx: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            self.mean = dt if self.n == 1 else (
+                self.mean + (dt - self.mean) / self.n)
+            return False
+        straggler = dt > self.mean + self.k * max(self.var ** 0.5,
+                                                  0.05 * self.mean)
+        delta = dt - self.mean
+        self.mean += self.alpha * delta
+        self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        if straggler:
+            self.events.append({"step": step_idx, "dt": dt,
+                                "mean": self.mean})
+        return straggler
+
+
+class Runner:
+    def __init__(self, suite: BenchmarkSuite, *,
+                 power_methods: Sequence[PowerMethod] = (),
+                 out_dir: str = "artifacts/bench",
+                 tags: Optional[set] = None,
+                 power_interval_ms: float = 50.0):
+        self.suite = suite
+        self.power_methods = list(power_methods)
+        self.out = pathlib.Path(out_dir) / suite.name
+        self.tags = tags
+        self.power_interval_ms = power_interval_ms
+        self.records: list[dict] = []
+
+    def run(self, verbose: bool = True) -> list[dict]:
+        self.out.mkdir(parents=True, exist_ok=True)
+        write_manifest(self.out, {"suite": self.suite.name})
+        steps = self.suite.select_steps(self.tags)
+        points = self.suite.points()
+        for i, pt in enumerate(points):
+            context: dict = {"out_dir": str(self.out)}
+            rec = dict(pt)
+            for step in steps:
+                ok, metrics = self._run_step(step, pt, context)
+                rec.update(metrics)
+                if not ok:
+                    break
+            self.records.append(rec)
+            if verbose:
+                print(f"[{self.suite.name}] {i + 1}/{len(points)} {rec}")
+            save_results(self.records, self.out, "results")
+        return self.records
+
+    def _run_step(self, step: Step, pt: dict, context: dict):
+        last_err = None
+        for attempt in range(step.retries):
+            try:
+                if self.power_methods:
+                    with get_power(self.power_methods,
+                                   self.power_interval_ms) as scope:
+                        metrics = step.fn(pt, context)
+                    edf, _ = scope.energy()
+                    metrics[f"{step.name}_energy_wh"] = float(
+                        sum(edf.col("energy_wh")))
+                else:
+                    metrics = step.fn(pt, context)
+                return True, metrics
+            except Exception as e:  # noqa: BLE001 - benchmark must continue
+                last_err = e
+        return False, {f"{step.name}_error":
+                       f"{type(last_err).__name__}: {last_err}"}
+
+    def result_table(self) -> str:
+        return table(self.records, self.suite.result_columns)

@@ -1,0 +1,12 @@
+from repro.data.indexed import IndexedDatasetReader, IndexedDatasetWriter
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import (
+    synthetic_images, synthetic_oscar_text, synthetic_tokens,
+)
+from repro.data.tokenizer import ByteFallbackTokenizer
+
+__all__ = [
+    "IndexedDatasetReader", "IndexedDatasetWriter", "ShardedLoader",
+    "synthetic_images", "synthetic_oscar_text", "synthetic_tokens",
+    "ByteFallbackTokenizer",
+]

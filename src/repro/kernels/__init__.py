@@ -1,0 +1,5 @@
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+
+__all__ = ["ops", "ref", "flash_attention_pallas", "rmsnorm_pallas"]

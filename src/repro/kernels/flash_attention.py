@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (GQA, causal, windowed).
+
+TPU-native design (not a CUDA port — see DESIGN.md):
+  - grid (B*H, nQ, nKV); the KV dimension is innermost, which Pallas TPU
+    executes SEQUENTIALLY per core, so the online-softmax running state
+    (m, l, acc) lives in VMEM scratch and is carried across KV steps;
+  - BlockSpecs tile q/k/v/o into MXU-aligned (block, d_head) VMEM blocks
+    (d_head 64/128 matches the 128-lane MXU systolic array);
+  - GQA is expressed in the k/v index_map (query head h reads KV head
+    h // group), so repeated KV is never materialized;
+  - causal/windowed masking is positional per block; fully-masked KV
+    blocks are skipped with pl.when (no MXU work), making windowed
+    attention honestly sub-quadratic.
+
+Validated against kernels/ref.py in interpret mode (tests sweep shapes,
+dtypes, GQA groups, window sizes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bk: int, n_kv: int, sq: int, skv: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # queries are the LAST sq positions of the kv stream (sq == skv for
+    # self-attention; sq < skv when decoding a suffix against a prefix).
+    q_off = skv - sq
+    run = True
+    if causal:
+        first_q = iq * bq + q_off
+        last_q = first_q + bq - 1
+        first_k = ik * bk
+        run = first_k <= last_q  # KV block intersects the visible triangle
+        if window is not None:
+            run = jnp.logical_and(run, (ik + 1) * bk - 1 > first_q - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                      # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            qpos = (iq * bq + q_off
+                    + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = kpos <= qpos
+            if window is not None:
+                mask = jnp.logical_and(mask, kpos > qpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])                          # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                      # (bk, d)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, Dh); k/v: (B, Kh, Skv, Dh). Returns (B, H, Sq, Dh)."""
+    b, h, sq, dh = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    n_q, n_kv = sq // bq, skv // bk
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv, sq=sq, skv=skv)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // h) * kh + (bh % h) // g, 0, ik, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bh, iq, ik: (bh, 0, iq, 0)),
+            pl.BlockSpec((1, 1, bk, dh), kv_index),
+            pl.BlockSpec((1, 1, bk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda bh, iq, ik: (bh, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * h, 1, sq, dh), k.reshape(b * kh, 1, skv, dh),
+      v.reshape(b * kh, 1, skv, dh))
+    return out.reshape(b, h, sq, dh)

@@ -1,0 +1,46 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+``impl="pallas"`` targets TPU (or interpret mode on CPU for validation);
+``impl="xla"`` routes to the pure-jnp reference path. The model code uses
+the XLA path for the CPU dry-run; real-TPU deployments flip the flag.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, impl: str = "pallas",
+                    interpret: bool = False, block_q: int = 128,
+                    block_k: int = 128):
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, Kh, Dh) — model layout (seq-major).
+
+    Transposed internally to the kernel's (B, H, S, Dh) layout.
+    """
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _flash_pallas(qt, kt, vt, causal=causal, window=window,
+                        block_q=block_q, block_k=block_k,
+                        interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "eps"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, impl: str = "pallas",
+            interpret: bool = False):
+    if impl == "xla":
+        return ref.rmsnorm_ref(x, scale, eps=eps)
+    return _rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)

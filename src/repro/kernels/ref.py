@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels. These define the semantics the
+kernels must match (asserted over shape/dtype sweeps in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, Kh, Dh), H % Kh == 0 (GQA).
+
+    fp32 softmax, bf16-friendly. Returns (B, Sq, H, Dh) in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, sq, kh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, kf)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (k.shape[1] - sq)
+        kpos = jnp.arange(k.shape[1])[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, vf)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ssd_chunk_ref(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
+                  h0: jax.Array):
+    """Single-chunk SSD: within-chunk quadratic + carried-in state.
+
+    xdt: (L, H, P); dA: (L, H); B/C: (L, N); h0: (H, P, N).
+    Returns (y (L, H, P), h_out (H, P, N)). fp32 math.
+    """
+    l, nh, p = xdt.shape
+    dA_cs = jnp.cumsum(dA.astype(jnp.float32), axis=0)        # (L, H)
+    ss = dA_cs[:, None, :] - dA_cs[None, :, :]                # (L, L, H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask[..., None], jnp.exp(ss), 0.0)      # (L, L, H)
+    scores = jnp.einsum("ln,sn->ls", C.astype(jnp.float32),
+                        B.astype(jnp.float32))
+    y_intra = jnp.einsum("ls,lsh,shp->lhp", scores, decay,
+                         xdt.astype(jnp.float32))
+    y_carry = jnp.einsum("ln,hpn,lh->lhp", C.astype(jnp.float32),
+                         h0.astype(jnp.float32), jnp.exp(dA_cs))
+    decay_to_end = jnp.exp(dA_cs[-1][None] - dA_cs)           # (L, H)
+    h_out = (h0.astype(jnp.float32) * jnp.exp(dA_cs[-1])[:, None, None]
+             + jnp.einsum("ln,lh,lhp->hpn", B.astype(jnp.float32),
+                          decay_to_end, xdt.astype(jnp.float32)))
+    return (y_intra + y_carry).astype(xdt.dtype), h_out.astype(h0.dtype)

@@ -1,0 +1,484 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+For every cell this driver:
+  1. builds the parallel Plan and abstract (ShapeDtypeStruct) inputs,
+  2. ``jax.jit(step).lower(...).compile()`` on the production mesh,
+  3. records memory_analysis / cost_analysis / parsed collective bytes,
+  4. appends one JSON artifact per cell under artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch granite-8b
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --all
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, PAPER_MODELS, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import attention as attn_mod
+from repro.models import lm
+from repro.parallel import sharding as sh
+from repro.roofline import analysis as roof
+from repro.roofline.hlo import parse_collectives
+from repro.serve.engine import make_decode_fn
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+from repro.train.step import StepConfig, make_train_step
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _cpu_f32_param_dupe_bytes(hlo_text: str) -> int:
+    """Bytes of top-level f32 copies of bf16 parameters.
+
+    XLA:CPU's float normalization rewrites bf16 dots to f32 dots (no native
+    bf16 matmul on CPU) and then hoists the weight-side converts out of the
+    layer while-loop, materializing full f32 twins of the stacked bf16
+    weights/caches. TPU executes bf16 dots natively on the MXU, so these
+    buffers do not exist there; we report memory both raw and corrected.
+    Only direct convert-of-parameter fusions are counted (fp32 gradient
+    accumulators etc. are real and kept).
+    """
+    import re as _re
+    total = 0
+    pat = _re.compile(r"= f32\[([0-9,]+)\]\S* fusion\(%param[^)]*\), kind=kLoop,"
+                      r" calls=%wrapped_convert")
+    for m in pat.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        total += n * 4
+    return total
+
+
+def _mem_dict(ma) -> dict:
+    if ma is None:
+        return {}
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes")
+    return {f: int(getattr(ma, f, 0)) for f in fields}
+
+
+def _pick_opt(c, n_dev: int) -> OptConfig:
+    # fp32 Adam + master = 12 B/param; when that alone would exceed half a
+    # v5e's HBM even fully sharded, fall back to Adafactor (factored second
+    # moment) — the standard very-large-model choice. Recorded per cell.
+    if c.param_count() * 12 / n_dev > 8 * 2**30:
+        return OptConfig(name="adafactor")
+    return OptConfig()
+
+
+def _opt_shardings(c, plan, aps, param_sh, oc=None):
+    oc = oc or OptConfig()
+    abstract_opt = jax.eval_shape(lambda p: opt_init(oc, p), aps)
+    zs = lambda: sh.opt_state_shardings(plan, param_sh, aps)
+    if oc.name == "adamw":
+        opt_sh = {"step": sh.replicated(plan), "m": zs(), "v": zs(),
+                  "master": zs()}
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def factored(drop_last: bool):
+            def rule(psh, leaf):
+                spec = list(psh.spec) + [None] * (leaf.ndim - len(psh.spec))
+                if leaf.ndim < 2:
+                    sub = [None] * max(leaf.ndim, 0)
+                elif drop_last:
+                    sub = spec[:-1]          # vr: reduced over last dim
+                else:
+                    sub = spec[:-2] + [spec[-1]]  # vc: reduced 2nd-to-last
+                return NamedSharding(plan.mesh, P(*sub))
+            return jax.tree.map(rule, param_sh, aps)
+
+        opt_sh = {"step": sh.replicated(plan), "vr": factored(True),
+                  "vc": factored(False)}
+    return sh.shard_abstract(abstract_opt, opt_sh), opt_sh
+
+
+def _analyze_compiled(compiled, n_dev: int):
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text(), n_dev)
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), colls)
+
+
+def _lin_metrics(weighted):
+    """Linear combination of (flops, bytes, colls) metric triples.
+
+    Used for layer-count extrapolation: programs with 1 and 2 layer periods
+    are compiled (tiny, fast) and metric(n) = (2-n)*m1 + (n-1)*m2, exact
+    because periods are structurally identical (validated in tests against
+    full unrolls). Avoids unrolling 36-96 layers through XLA:CPU.
+    """
+    f = sum(w * m[0] for m, w in weighted)
+    b = sum(w * m[1] for m, w in weighted)
+    colls = _combine_colls([(m[2], w) for m, w in weighted])
+    for op in list(colls.counts):
+        colls.counts[op] = max(int(round(colls.counts[op])), 0)
+        colls.result_bytes[op] = max(int(round(colls.result_bytes[op])), 0)
+        colls.wire_bytes[op] = max(colls.wire_bytes[op], 0.0)
+    return f, b, colls
+
+
+def _reduced_depth_config(c: ModelConfig, n_periods: int,
+                          n_enc: int | None = None) -> ModelConfig:
+    import dataclasses
+    from repro.models.blocks import period_of
+    kw = {"n_layers": period_of(c) * n_periods}
+    if c.n_enc_layers:
+        kw["n_enc_layers"] = n_enc if n_enc is not None else c.n_enc_layers
+    return dataclasses.replace(c, **kw)
+
+
+def lower_cell(c: ModelConfig, shape: ShapeConfig, mesh,
+               mesh_name: str, *, microbatch_size: int = 4,
+               plan_overrides: dict | None = None,
+               step_overrides: dict | None = None,
+               metrics_pass: bool = True):
+    """Lower + compile one cell; return (record_dict, compiled).
+
+    Two compiles per cell:
+      A) the REAL step (layer scan, microbatch accumulation) -> proves the
+         cell compiles and gives the true memory_analysis (scan/while
+         buffers are allocated once, so memory is accurate);
+      B) a metrics pass with UNROLLED layer scans (single microbatch for
+         train) -> accurate FLOPs + collective bytes, since XLA's
+         cost_analysis counts a while-loop body only once (verified in
+         tests). Train totals = k * grad_microbatch + optimizer program C.
+    """
+    plan = sh.make_plan(c, mesh, shape)
+    if plan_overrides:
+        import dataclasses
+        plan = dataclasses.replace(plan, **plan_overrides)
+    n_dev = mesh.size
+    # Micro-batch-size: the paper uses 4 (800M model on 40 GB A100); on
+    # 16 GiB v5e we scale it down with model size so activations fit.
+    params_b = c.param_count()
+    if params_b > 16e9 or plan.fsdp:
+        microbatch_size = 1
+    elif params_b > 4e9:
+        microbatch_size = min(microbatch_size, 2)
+    t0 = time.time()
+    with mesh:
+        aps_sharded, param_sh = specs_mod.abstract_params(c, plan)
+        k = 1
+        if shape.kind == "train":
+            per_dev_batch = max(shape.global_batch // max(
+                sh._dp_size(plan), 1), 1)
+            k = max(per_dev_batch // microbatch_size, 1)
+            sc = StepConfig(microbatches=k, impl=plan.attn_impl,
+                            remat="full", **(step_overrides or {}))
+            abstract_p = lm.init_abstract(c)
+            grad_sh = sh.opt_state_shardings(plan, param_sh, abstract_p)
+            batch = specs_mod.train_batch_specs(c, plan, shape)
+            batch_sh = jax.tree.map(lambda s: s.sharding, batch)
+            oc = _pick_opt(c, n_dev)
+            step = make_train_step(c, oc, sc, grad_shardings=grad_sh,
+                                   batch_shardings=batch_sh)
+            opt_sharded, opt_sh = _opt_shardings(c, plan, abstract_p,
+                                                 param_sh, oc)
+            jitted = jax.jit(step, out_shardings=(param_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            with _lower_ctx(c, plan, shape, shape.global_batch // k):
+                lowered = jitted.lower(aps_sharded, opt_sharded, batch)
+        elif shape.kind == "prefill":
+            tokens, extras = specs_mod.prefill_specs(c, plan, shape)
+
+            def prefill_step(params, tokens, extras, unroll=False):
+                return lm.prefill(
+                    c, params, tokens,
+                    patch_embeds=extras.get("patch_embeds"),
+                    enc_frames=extras.get("enc_frames"),
+                    impl=plan.attn_impl, unroll=unroll)
+
+            # pin output cache shardings (batch over dp, heads/Dh over tp)
+            _, caches_sds, pos_sds, enckv_sds = specs_mod.decode_specs(
+                c, plan, shape, lm.init_abstract(c))
+            cache_out_sh = jax.tree.map(lambda s: s.sharding, caches_sds)
+            enckv_out_sh = (None if enckv_sds is None else
+                            jax.tree.map(lambda s: s.sharding, enckv_sds))
+            with _lower_ctx(c, plan, shape, shape.global_batch):
+                lowered = jax.jit(
+                    prefill_step,
+                    out_shardings=(None, cache_out_sh, enckv_out_sh)).lower(
+                        aps_sharded, tokens, extras)
+        else:  # decode
+            token, caches, pos, enc_kv = specs_mod.decode_specs(
+                c, plan, shape, lm.init_abstract(c))
+            serve_step = make_decode_fn(c, impl="grouped")
+            cache_out_sh = jax.tree.map(lambda x: x.sharding, caches)
+            jitted = jax.jit(serve_step, donate_argnums=(2,),
+                             out_shardings=(None, cache_out_sh))
+            with _lower_ctx(c, plan, shape, shape.global_batch):
+                lowered = jitted.lower(aps_sharded, token, caches, pos, enc_kv)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        # ---- metrics pass (layer-count extrapolation) ------------------
+        flops = hbm_bytes = 0.0
+        colls = None
+        t_metrics = 0.0
+        if metrics_pass:
+            tm = time.time()
+            flops, hbm_bytes, colls = _metrics_extrapolated(
+                c, plan, shape, mesh, k, step_overrides=step_overrides)
+            if shape.kind == "train":
+                # C: optimizer-only program (full-depth param tree)
+                oc_c = _pick_opt(c, n_dev)
+
+                def opt_only(grads, state, params):
+                    return opt_update(oc_c, grads, state, params)
+
+                grads_spec = sh.shard_abstract(
+                    jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+                        l.shape, jnp.float32), lm.init_abstract(c)),
+                    param_sh)
+                comp_c = jax.jit(opt_only).lower(
+                    grads_spec, opt_sharded, aps_sharded).compile()
+                fc, bc, cc = _analyze_compiled(comp_c, n_dev)
+                flops = k * flops + fc
+                hbm_bytes = k * hbm_bytes + bc
+                colls = _combine_colls([(colls, k), (cc, 1)])
+            t_metrics = time.time() - tm
+
+    ma = _mem_dict(compiled.memory_analysis())
+    f32_dupes = _cpu_f32_param_dupe_bytes(compiled.as_text())
+    if colls is None:
+        flops, hbm_bytes, colls = _analyze_compiled(compiled, n_dev)
+    r = roof.analyze(c, shape, mesh_name=mesh_name, n_devices=n_dev,
+                     flops_per_device=flops, hbm_bytes_per_device=hbm_bytes,
+                     wire_bytes_per_device=colls.total_wire_bytes)
+    per_dev_hbm = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)
+                   + ma.get("output_size_in_bytes", 0)
+                   - ma.get("alias_size_in_bytes", 0))
+    per_dev_hbm_tpu = per_dev_hbm - f32_dupes
+    rec = {
+        "arch": c.name, "shape": shape.name, "mesh": mesh_name,
+        "n_devices": n_dev, "kind": shape.kind, "microbatches": k,
+        "optimizer": _pick_opt(c, n_dev).name if shape.kind == "train"
+        else None,
+        "plan": {"tp_heads": plan.tp_heads, "fsdp": plan.fsdp, "ep": plan.ep,
+                 "attn_impl": plan.attn_impl, "seq_axis": plan.seq_axis,
+                 **(plan_overrides or {})},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "metrics_s": round(t_metrics, 2),
+        "memory_analysis": ma,
+        "bytes_per_device": per_dev_hbm,
+        "cpu_f32_param_dupe_bytes": f32_dupes,
+        "bytes_per_device_tpu": per_dev_hbm_tpu,
+        "fits_hbm_16g": per_dev_hbm_tpu < 16 * 1024**3,
+        "fits_hbm_16g_raw_cpu": per_dev_hbm < 16 * 1024**3,
+        "cost_analysis": {"flops": flops, "bytes_accessed": hbm_bytes},
+        "collectives": colls.to_dict(),
+        "roofline": r.to_dict(),
+    }
+    return rec, compiled
+
+
+def dataclasses_replace_shape(shape: ShapeConfig, new_batch: int) -> ShapeConfig:
+    import dataclasses
+    return dataclasses.replace(shape, global_batch=new_batch)
+
+
+def _hints_for(c: ModelConfig, plan, shape: ShapeConfig, batch: int):
+    cache_seq = shape.seq_len if shape.kind == "decode" else 0
+    return sh.make_attn_hints(c, plan, batch, cache_seq=cache_seq,
+                              decode=shape.kind == "decode",
+                              seq_len=shape.seq_len)
+
+
+class _lower_ctx:
+    """Sharding hints + MoE dispatch impl for one lowering."""
+
+    def __init__(self, c, plan, shape, batch):
+        import contextlib
+        self.stack = contextlib.ExitStack()
+        self.c, self.plan, self.shape, self.batch = c, plan, shape, batch
+
+    def __enter__(self):
+        from jax.sharding import PartitionSpec as P
+        from repro.models import moe as moe_mod2
+        self.stack.enter_context(attn_mod.sharding_hints(
+            _hints_for(self.c, self.plan, self.shape, self.batch)))
+        if self.c.n_experts and not self.plan.ep:
+            self.stack.enter_context(moe_mod2.moe_impl("dense"))
+        elif self.c.n_experts and getattr(self.plan, "moe_dshard", False):
+            self.stack.enter_context(moe_mod2.moe_impl(
+                "scatter", buf_spec=P(None, self.plan.tp)))
+        return self
+
+    def __exit__(self, *exc):
+        self.stack.close()
+        return False
+
+
+def _lower_metrics_program(cfg: ModelConfig, plan, shape: ShapeConfig,
+                           mb_batch: int, step_overrides: dict | None = None):
+    """Lower one reduced-depth metrics program (unroll=True, trip<=2)."""
+    import dataclasses as dc
+    plan_r = dc.replace(plan)  # same layout flags, reduced-depth model
+    aps_sharded, param_sh = specs_mod.abstract_params(cfg, plan_r)
+    if shape.kind == "train":
+        from repro.train.step import make_loss_fn
+        sc_u = StepConfig(microbatches=1, impl=plan.attn_impl,
+                          remat="full", unroll=True,
+                          **(step_overrides or {}))
+        loss_fn = make_loss_fn(cfg, sc_u)
+        vg = jax.value_and_grad(loss_fn, has_aux=True)
+        mb_shape = dataclasses_replace_shape(shape, mb_batch)
+        batch = specs_mod.train_batch_specs(cfg, plan_r, mb_shape)
+        # pin grad shardings like the real step (ZeRO grad buffer)
+        grad_sh = sh.opt_state_shardings(
+            plan_r, param_sh, lm.init_abstract(cfg))
+        with _lower_ctx(cfg, plan, shape, mb_batch):
+            return jax.jit(vg, out_shardings=(None, grad_sh)).lower(
+                aps_sharded, batch)
+    if shape.kind == "prefill":
+        tokens, extras = specs_mod.prefill_specs(cfg, plan_r, shape)
+
+        def prefill_step(params, tokens, extras):
+            return lm.prefill(cfg, params, tokens,
+                              patch_embeds=extras.get("patch_embeds"),
+                              enc_frames=extras.get("enc_frames"),
+                              impl=plan.attn_impl, unroll=True)
+
+        with _lower_ctx(cfg, plan, shape, shape.global_batch):
+            return jax.jit(prefill_step).lower(aps_sharded, tokens, extras)
+    token, caches, pos, enc_kv = specs_mod.decode_specs(
+        cfg, plan_r, shape, lm.init_abstract(cfg))
+
+    def serve_step(params, token, caches, pos, enc_kv):
+        return lm.decode_step(cfg, params, token, caches, pos,
+                              enc_kv=enc_kv, impl="grouped", unroll=True)
+
+    cache_out_sh = jax.tree.map(lambda x: x.sharding, caches)
+    with _lower_ctx(cfg, plan, shape, shape.global_batch):
+        return jax.jit(serve_step, donate_argnums=(2,),
+                       out_shardings=(None, cache_out_sh)).lower(
+            aps_sharded, token, caches, pos, enc_kv)
+
+
+def _metrics_extrapolated(c: ModelConfig, plan, shape: ShapeConfig, mesh,
+                          k: int, step_overrides: dict | None = None):
+    """FLOPs/bytes/collectives via 1-vs-2-period extrapolation."""
+    from repro.models.blocks import period_of
+    n_dev = mesh.size
+    n = c.n_layers // period_of(c)
+    mb_batch = shape.global_batch // k if shape.kind == "train" else 0
+
+    def run(np_, ne_=None):
+        cfg = _reduced_depth_config(c, np_, ne_)
+        comp = _lower_metrics_program(cfg, plan, shape, mb_batch,
+                                      step_overrides).compile()
+        return _analyze_compiled(comp, n_dev)
+
+    if c.n_enc_layers:  # separate encoder/decoder slopes (3-point)
+        ne = c.n_enc_layers
+        m11, m21, m12 = run(1, 1), run(2, 1), run(1, 2)
+        return _lin_metrics([(m11, float(3 - n - ne)),
+                             (m21, float(n - 1)), (m12, float(ne - 1))])
+    if n == 1:
+        return run(1)
+    m1, m2 = run(1), run(2)
+    return _lin_metrics([(m1, float(2 - n)), (m2, float(n - 1))])
+
+
+def _combine_colls(weighted):
+    """Sum CollectiveStats with multipliers."""
+    from repro.roofline.hlo import CollectiveStats
+    out = CollectiveStats()
+    for st, w in weighted:
+        for op, n in st.counts.items():
+            out.counts[op] += n * w
+        for op, b in st.result_bytes.items():
+            out.result_bytes[op] += b * w
+        for op, b in st.wire_bytes.items():
+            out.wire_bytes[op] += b * w
+    return out
+
+
+def run_cells(archs, shapes, meshes, out_dir: pathlib.Path,
+              microbatch_size: int = 4, tag: str = "",
+              metrics_pass: bool = True) -> list[dict]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in archs:
+            c = get_config(arch)
+            for sname in shapes:
+                shape = SHAPES[sname]
+                if sname == "long_500k" and not c.long_context_ok:
+                    rec = {"arch": arch, "shape": sname, "mesh": mesh_name,
+                           "skipped": "full quadratic attention (DESIGN.md)"}
+                    results.append(rec)
+                    continue
+                fn = out_dir / f"{mesh_name}__{arch}__{sname}{tag}.json"
+                print(f"[dryrun] {mesh_name:6s} {arch:28s} {sname:12s} ... ",
+                      end="", flush=True)
+                try:
+                    rec, _ = lower_cell(c, shape, mesh, mesh_name,
+                                        microbatch_size=microbatch_size,
+                                        metrics_pass=metrics_pass)
+                    rf = rec["roofline"]
+                    print(f"ok compile={rec['compile_s']:.1f}s "
+                          f"bottleneck={rf['bottleneck']:10s} "
+                          f"frac={rf['roofline_fraction']:.3f} "
+                          f"fits={rec['fits_hbm_16g']}")
+                except Exception as e:  # record failures as bugs to fix
+                    rec = {"arch": arch, "shape": sname, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"FAIL {type(e).__name__}: {str(e)[:120]}")
+                fn.write_text(json.dumps(rec, indent=1))
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--paper-models", action="store_true")
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=str(ART))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="compile+memory proof only (multi-pod pass; the "
+                         "roofline table is single-pod)")
+    args = ap.parse_args()
+
+    archs = args.arch or list(ASSIGNED)
+    if args.paper_models:
+        archs += list(PAPER_MODELS)
+    shapes = args.shape or list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(archs, shapes, meshes, pathlib.Path(args.out),
+                        tag=args.tag, metrics_pass=not args.no_metrics)
+    n_ok = sum(1 for r in results if "roofline" in r)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Slurm job-script generation (the JUBE platform.xml analog).
+
+CARAML populates job templates from a system config and submits to Slurm;
+this module renders equivalent sbatch scripts for TPU pod slices, with the
+affinity/binding lessons from the paper's Section V baked in (one task per
+host, open CPU masks for collective helper threads, explicit coordinator
+address for multi-pod jobs).
+"""
+from __future__ import annotations
+
+import pathlib
+from dataclasses import dataclass, field
+
+
+@dataclass
+class SystemConfig:
+    """Per-system template values (the platform.xml analog)."""
+    name: str = "v5e-pod"
+    hosts_per_pod: int = 64          # v5e-256: 64 hosts x 4 chips
+    chips_per_host: int = 4
+    partition: str = "tpu"
+    account: str = "repro"
+    container: str = ""              # optional container image
+    env: dict = field(default_factory=dict)
+
+
+TEMPLATE = """#!/bin/bash
+#SBATCH --job-name={job_name}
+#SBATCH --partition={partition}
+#SBATCH --account={account}
+#SBATCH --nodes={n_hosts}
+#SBATCH --ntasks-per-node=1
+#SBATCH --cpus-per-task={cpus}
+#SBATCH --exclusive
+#SBATCH --time={time_limit}
+#SBATCH --output={log_dir}/%x_%j.out
+
+# one task per host; open CPU mask so collective helper threads can float
+# (CARAML Sec. V: over-tight masks starve NCCL/ICI helper threads)
+export SLURM_CPU_BIND=none
+{env_exports}
+export REPRO_TPU=1
+# multi-pod rendezvous: first host of the allocation coordinates
+export JAX_COORDINATOR_ADDRESS=$(scontrol show hostnames $SLURM_JOB_NODELIST | head -n1):8476
+export JAX_NUM_PROCESSES=$SLURM_NTASKS
+export JAX_PROCESS_ID=$SLURM_PROCID
+
+srun {container_prefix}python -m {module} {args}
+"""
+
+
+def render_job(*, job_name: str, module: str, args: str,
+               system: SystemConfig, n_pods: int = 1,
+               time_limit: str = "02:00:00", log_dir: str = "logs") -> str:
+    env_exports = "\n".join(f"export {k}={v}" for k, v in system.env.items())
+    container_prefix = (f"apptainer exec {system.container} "
+                        if system.container else "")
+    return TEMPLATE.format(
+        job_name=job_name, partition=system.partition, account=system.account,
+        n_hosts=system.hosts_per_pod * n_pods, cpus=112,
+        time_limit=time_limit, log_dir=log_dir, env_exports=env_exports,
+        container_prefix=container_prefix, module=module, args=args)
+
+
+def write_launch_scripts(out_dir, archs, system: SystemConfig | None = None):
+    """Render train + dry-run scripts for every arch (single & multi pod)."""
+    system = system or SystemConfig()
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    written = []
+    for arch in archs:
+        for pods, tag in ((1, "pod1"), (2, "pod2")):
+            script = render_job(
+                job_name=f"train_{arch}_{tag}",
+                module="repro.launch.train",
+                args=f"--arch {arch} --preset full",
+                system=system, n_pods=pods)
+            p = out / f"train_{arch}_{tag}.sbatch"
+            p.write_text(script)
+            written.append(str(p))
+    dry = render_job(job_name="dryrun", module="repro.launch.dryrun",
+                     args="--mesh both", system=system, n_pods=2)
+    (out / "dryrun.sbatch").write_text(dry)
+    written.append(str(out / "dryrun.sbatch"))
+    return written

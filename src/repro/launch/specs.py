@@ -1,0 +1,76 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers and
+compiles against these. Modality frontends are stubs: whisper gets
+precomputed frame embeddings, llava gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.parallel import sharding as sh
+from repro.serve.cache import abstract_caches
+
+Params = Any
+
+
+def abstract_params(c: ModelConfig, plan: sh.Plan):
+    """Abstract (no-alloc) params with production shardings attached."""
+    aps = lm.init_abstract(c)
+    shards = sh.param_shardings(c, plan, aps)
+    return sh.shard_abstract(aps, shards), shards
+
+
+def train_batch_specs(c: ModelConfig, plan: sh.Plan, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - (c.n_patches if c.family == "vlm" else 0)
+    mk = lambda shp, dt: jax.ShapeDtypeStruct(
+        shp, dt, sharding=sh.batch_sharding(plan, shp))
+    batch = {
+        "tokens": mk((b, s_text), jnp.int32),
+        "labels": mk((b, s_text), jnp.int32),
+    }
+    if c.family == "vlm":
+        batch["patch_embeds"] = mk((b, c.n_patches, c.d_model), jnp.dtype(c.dtype))
+    if c.family == "encdec":
+        batch["enc_frames"] = mk((b, c.enc_seq, c.d_model), jnp.dtype(c.dtype))
+    return batch
+
+
+def prefill_specs(c: ModelConfig, plan: sh.Plan, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - (c.n_patches if c.family == "vlm" else 0)
+    mk = lambda shp, dt: jax.ShapeDtypeStruct(
+        shp, dt, sharding=sh.batch_sharding(plan, shp))
+    tokens = mk((b, s_text), jnp.int32)
+    extras = {}
+    if c.family == "vlm":
+        extras["patch_embeds"] = mk((b, c.n_patches, c.d_model), jnp.dtype(c.dtype))
+    if c.family == "encdec":
+        extras["enc_frames"] = mk((b, c.enc_seq, c.d_model), jnp.dtype(c.dtype))
+    return tokens, extras
+
+
+def decode_specs(c: ModelConfig, plan: sh.Plan, shape: ShapeConfig,
+                 aps_sharded):
+    """(token, caches, pos, enc_kv) specs for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    (caches, enc_kv), _ = abstract_caches(c, b, s, aps_sharded)
+
+    def shard_cache(path, leaf):
+        ns = sh.cache_sharding(c, plan, path, leaf.shape)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=ns)
+
+    caches = jax.tree_util.tree_map_with_path(shard_cache, caches)
+    if enc_kv is not None:
+        enc_kv = jax.tree_util.tree_map_with_path(shard_cache, enc_kv)
+    token = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32, sharding=sh.batch_sharding(plan, (b, 1)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=sh.replicated(plan))
+    return token, caches, pos, enc_kv

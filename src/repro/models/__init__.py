@@ -1,0 +1,3 @@
+from repro.models import attention, blocks, common, lm, moe, resnet, ssm
+
+__all__ = ["attention", "blocks", "common", "lm", "moe", "resnet", "ssm"]

@@ -1,0 +1,259 @@
+"""Decoder blocks + period-pattern LayerStack (scan over layers).
+
+Heterogeneous layer patterns (Jamba's 1-attn-per-8, llama4's MoE-every-2nd)
+are handled by unrolling one *period* of the pattern inside the scan body
+and scanning over ``n_layers // period`` stacked parameter pytrees. This
+keeps the HLO compact (compile time ~O(period), not O(n_layers)) and gives
+natural full-activation-recomputation boundaries (the paper's Megatron
+setup enables activation recomputation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import apply_mlp, apply_norm, mlp_init, norm_init
+
+Params = Any
+
+
+def period_of(c: ModelConfig) -> int:
+    p = 1
+    if c.family == "hybrid":
+        p = c.attn_layer_period
+    if c.n_experts:
+        p = max(p, c.moe_layer_step)
+        assert p % c.moe_layer_step == 0, "incompatible layer pattern"
+    assert c.n_layers % p == 0, (c.n_layers, p)
+    return p
+
+
+def slot_kinds(c: ModelConfig) -> list[tuple[str, Optional[str]]]:
+    """Per-slot (mixer, ffn) kinds for one period of the layer pattern."""
+    kinds = []
+    for i in range(period_of(c)):
+        mixer = "attn" if c.is_attn_layer(i) else "mamba"
+        if c.family == "ssm":
+            ffn = None
+        elif c.is_moe_layer(i):
+            ffn = "moe"
+        elif c.d_ff:
+            ffn = "mlp"
+        else:
+            ffn = None
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _slot_init(key, c: ModelConfig, mixer: str, ffn: Optional[str],
+               cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": norm_init(c)}
+    if mixer == "attn":
+        p["attn"] = attn.attn_init(ks[0], c)
+    else:
+        p["mamba"] = ssm_mod.mamba_init(ks[0], c)
+    if cross:
+        p["norm_x"] = norm_init(c)
+        p["cross"] = attn.attn_init(ks[1], c)
+    if ffn == "mlp":
+        p["norm2"] = norm_init(c)
+        p["mlp"] = mlp_init(ks[2], c, c.d_ff)
+    elif ffn == "moe":
+        p["norm2"] = norm_init(c)
+        p["moe"] = moe_mod.moe_init(ks[3], c)
+    return p
+
+
+def stack_init(key, c: ModelConfig, cross: bool = False) -> Params:
+    """Stacked layer params: leaf leading dim = n_periods."""
+    period = period_of(c)
+    n_periods = c.n_layers // period
+    kinds = slot_kinds(c)
+
+    def one_period(k):
+        kslots = jax.random.split(k, period)
+        return {f"slot{i}": _slot_init(kslots[i], c, *kinds[i], cross=cross)
+                for i in range(period)}
+
+    keys = jax.random.split(key, n_periods)
+    periods = [one_period(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+
+
+def enc_stack_init(key, c: ModelConfig) -> Params:
+    """Encoder stack (bidirectional attn + mlp), its own depth."""
+    keys = jax.random.split(key, c.n_enc_layers)
+    layers = [_slot_init(k, c, "attn", "mlp") for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_slot(c: ModelConfig, sp: Params, x: jax.Array, *, mixer: str,
+                ffn: Optional[str], causal: bool, impl: str,
+                positions=None, enc_kv=None, unroll: bool = False):
+    rh = lambda t: attn._hint(t, "resid_spec")  # bf16 block all-reduce
+    h = apply_norm(c, sp["norm1"], x)
+    if mixer == "attn":
+        h = attn.self_attention(c, sp["attn"], h, causal=causal,
+                                positions=positions, impl=impl,
+                                unroll=unroll)
+    else:
+        h = ssm_mod.mamba_forward(c, sp["mamba"], h, unroll=unroll)
+    x = x + rh(h)
+    aux = jnp.zeros((), jnp.float32)
+    if enc_kv is not None:
+        h = apply_norm(c, sp["norm_x"], x)
+        x = x + rh(attn.cross_attention(c, sp["cross"], h, enc_kv, impl=impl))
+    if ffn == "mlp":
+        x = x + rh(apply_mlp(c, sp["mlp"], apply_norm(c, sp["norm2"], x)))
+    elif ffn == "moe":
+        y, aux = moe_mod.moe_forward(c, sp["moe"], apply_norm(c, sp["norm2"], x))
+        x = x + rh(y)
+    return x, aux
+
+
+def stack_forward(c: ModelConfig, layers: Params, x: jax.Array, *,
+                  causal: bool = True, impl: str = "repeat",
+                  remat: str = "full", positions=None,
+                  enc_kv_stacked=None, unroll: bool = False):
+    """Run the full layer stack. x: (B, S, D) -> (B, S, D), aux_loss."""
+    kinds = slot_kinds(c)
+
+    def body(carry, inp):
+        x, aux = carry
+        if enc_kv_stacked is not None:
+            period_params, ekv = inp
+        else:
+            period_params, ekv = inp, None
+        for i, (mixer, ffn) in enumerate(kinds):
+            x, a = _apply_slot(c, period_params[f"slot{i}"], x, mixer=mixer,
+                               ffn=ffn, causal=causal, impl=impl,
+                               positions=positions, unroll=unroll,
+                               enc_kv=None if ekv is None else
+                               (ekv[f"slot{i}"]["k"], ekv[f"slot{i}"]["v"]))
+            aux = aux + a
+        return (x, aux), None
+
+    if remat == "full":
+        body = jax.checkpoint(body, policy=None)  # recompute everything
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = layers if enc_kv_stacked is None else (layers, enc_kv_stacked)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                               unroll=unroll)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
+                  impl: str = "repeat", positions=None, enc_kv_stacked=None,
+                  unroll: bool = False):
+    """Full-sequence causal pass that also emits per-layer caches."""
+    kinds = slot_kinds(c)
+
+    def body(carry, inp):
+        x = carry
+        if enc_kv_stacked is not None:
+            period_params, ekv = inp
+        else:
+            period_params, ekv = inp, None
+        caches = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            sp = period_params[f"slot{i}"]
+            h = apply_norm(c, sp["norm1"], x)
+            if mixer == "attn":
+                h, (k, v) = attn.prefill_attention(c, sp["attn"], h,
+                                                   positions=positions,
+                                                   impl=impl, unroll=unroll)
+                caches[f"slot{i}"] = {"k": k, "v": v}
+            else:
+                h, (conv_tail, hstate) = ssm_mod.mamba_forward(
+                    c, sp["mamba"], h, return_state=True, unroll=unroll)
+                caches[f"slot{i}"] = {"ssm": hstate, "conv": conv_tail}
+            x = x + h
+            if ekv is not None:
+                hx = apply_norm(c, sp["norm_x"], x)
+                x = x + attn.cross_attention(
+                    c, sp["cross"], hx,
+                    (ekv[f"slot{i}"]["k"], ekv[f"slot{i}"]["v"]), impl=impl)
+            if ffn == "mlp":
+                x = x + apply_mlp(c, sp["mlp"], apply_norm(c, sp["norm2"], x))
+            elif ffn == "moe":
+                y, _ = moe_mod.moe_forward(c, sp["moe"],
+                                           apply_norm(c, sp["norm2"], x))
+                x = x + y
+        return x, caches
+
+    xs = layers if enc_kv_stacked is None else (layers, enc_kv_stacked)
+    x, caches = jax.lax.scan(body, x, xs, unroll=unroll)
+    return x, caches
+
+
+def stack_decode(c: ModelConfig, layers: Params, x: jax.Array, caches: Params,
+                 pos: jax.Array, *, impl: str = "grouped",
+                 enc_kv_stacked=None, unroll: bool = False):
+    """One-token decode through the stack, updating caches in place."""
+    kinds = slot_kinds(c)
+
+    def body(x, inp):
+        if enc_kv_stacked is not None:
+            period_params, cache, ekv = inp
+        else:
+            (period_params, cache), ekv = inp, None
+        new_cache = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            sp = period_params[f"slot{i}"]
+            sc = cache[f"slot{i}"]
+            h = apply_norm(c, sp["norm1"], x)
+            if mixer == "attn":
+                h, ck, cv = attn.decode_attention(c, sp["attn"], h,
+                                                  sc["k"], sc["v"], pos,
+                                                  impl=impl)
+                new_cache[f"slot{i}"] = {"k": ck, "v": cv}
+            else:
+                h, conv_s, ssm_s = ssm_mod.mamba_decode(c, sp["mamba"], h,
+                                                        sc["conv"], sc["ssm"])
+                new_cache[f"slot{i}"] = {"conv": conv_s, "ssm": ssm_s}
+            x = x + h
+            if ekv is not None:
+                hx = apply_norm(c, sp["norm_x"], x)
+                x = x + attn.cross_attention(
+                    c, sp["cross"], hx,
+                    (ekv[f"slot{i}"]["k"], ekv[f"slot{i}"]["v"]), impl=impl)
+            if ffn == "mlp":
+                x = x + apply_mlp(c, sp["mlp"], apply_norm(c, sp["norm2"], x))
+            elif ffn == "moe":
+                y, _ = moe_mod.moe_forward(c, sp["moe"],
+                                           apply_norm(c, sp["norm2"], x))
+                x = x + y
+        return x, new_cache
+
+    if enc_kv_stacked is None:
+        x, new_caches = jax.lax.scan(body, x, (layers, caches), unroll=unroll)
+    else:
+        x, new_caches = jax.lax.scan(body, x, (layers, caches, enc_kv_stacked),
+                                     unroll=unroll)
+    return x, new_caches

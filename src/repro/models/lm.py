@@ -1,0 +1,162 @@
+"""Top-level language models: decoder-only (dense/moe/ssm/hybrid/vlm) and
+encoder-decoder (whisper backbone). Pure functions of (config, params).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import blocks
+from repro.models.common import (
+    apply_norm, dtype_of, embed_tokens, embedding_init, norm_init, unembed,
+)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init(key, c: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "embed": embedding_init(k1, c),
+        "layers": blocks.stack_init(k2, c, cross=c.family == "encdec"),
+        "final_norm": norm_init(c),
+    }
+    if c.family == "encdec":
+        p["encoder"] = {
+            "layers": blocks.enc_stack_init(k3, c),
+            "norm": norm_init(c),
+            # learned positions for encoder frames
+            "pos": (jax.random.normal(k4, (c.enc_seq, c.d_model), jnp.float32)
+                    * 0.02).astype(jnp.dtype(c.param_dtype)),
+        }
+    return p
+
+
+def init_abstract(c: ModelConfig) -> Params:
+    """Shape-only params (no allocation) — used by the dry-run."""
+    return jax.eval_shape(lambda k: init(k, c), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _inputs_to_embeds(c: ModelConfig, p: Params, tokens: jax.Array,
+                      patch_embeds: Optional[jax.Array],
+                      pos_offset: int = 0) -> jax.Array:
+    b, s_text = tokens.shape
+    positions = jnp.arange(s_text)[None, :] + pos_offset
+    x = embed_tokens(c, p["embed"], tokens, positions)
+    if c.family == "vlm" and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def encode(c: ModelConfig, p: Params, frames: jax.Array,
+           unroll: bool = False):
+    """Whisper-backbone encoder over precomputed frame embeddings.
+
+    frames: (B, T_enc, D) — the conv frontend is a stub (precomputed).
+    Returns encoder output and stacked per-decoder-layer cross K/V.
+    """
+    enc = p["encoder"]
+    x = frames.astype(dtype_of(c)) + enc["pos"][None].astype(dtype_of(c))
+
+    def body(x, layer):
+        h = apply_norm(c, layer["norm1"], x)
+        x = x + attn.self_attention(c, layer["attn"], h, causal=False)
+        from repro.models.common import apply_mlp
+        x = x + apply_mlp(c, layer["mlp"], apply_norm(c, layer["norm2"], x))
+        return x, None
+
+    # remat: without it the backward saves every encoder layer's O(T^2)
+    # softmax internals (measured 15+ GiB on whisper train_4k)
+    x, _ = jax.lax.scan(jax.checkpoint(body, policy=None), x, enc["layers"],
+                        unroll=unroll)
+    enc_out = apply_norm(c, enc["norm"], x)
+
+    # Per-decoder-layer cross-attention K/V (stacked like the layer params)
+    def kv_body(_, period_params):
+        ekv = {}
+        for i in range(blocks.period_of(c)):
+            sp = period_params[f"slot{i}"]
+            k, v = attn.encoder_kv(c, sp["cross"], enc_out)
+            ekv[f"slot{i}"] = {"k": k, "v": v}
+        return None, ekv
+
+    _, enc_kv = jax.lax.scan(kv_body, None, p["layers"], unroll=unroll)
+    return enc_out, enc_kv
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def forward(c: ModelConfig, p: Params, tokens: jax.Array, *,
+            patch_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            impl: str = "repeat", remat: str = "full", unroll: bool = False):
+    """Full causal forward. Returns (logits, aux_loss).
+
+    vlm:    logits cover only the text positions (patches are prefix).
+    encdec: enc_frames (B, T_enc, D) must be provided.
+    """
+    x = _inputs_to_embeds(c, p, tokens, patch_embeds)
+    enc_kv = None
+    if c.family == "encdec":
+        assert enc_frames is not None
+        _, enc_kv = encode(c, p, enc_frames, unroll=unroll)
+    x, aux = blocks.stack_forward(c, p["layers"], x, causal=True, impl=impl,
+                                  remat=remat, enc_kv_stacked=enc_kv,
+                                  unroll=unroll)
+    x = apply_norm(c, p["final_norm"], x)
+    if c.family == "vlm" and patch_embeds is not None:
+        x = x[:, patch_embeds.shape[1]:]
+    logits = unembed(c, p["embed"], x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
+            patch_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None, impl: str = "repeat",
+            unroll: bool = False):
+    """Process the prompt; return (last-position logits, caches, enc_kv)."""
+    x = _inputs_to_embeds(c, p, tokens, patch_embeds)
+    enc_kv = None
+    if c.family == "encdec":
+        _, enc_kv = encode(c, p, enc_frames, unroll=unroll)
+    x, caches = blocks.stack_prefill(c, p["layers"], x, impl=impl,
+                                     enc_kv_stacked=enc_kv, unroll=unroll)
+    x_last = apply_norm(c, p["final_norm"], x[:, -1:])
+    logits = unembed(c, p["embed"], x_last)
+    return logits, caches, enc_kv
+
+
+def decode_step(c: ModelConfig, p: Params, token: jax.Array, caches: Params,
+                pos: jax.Array, *, enc_kv: Params = None,
+                impl: str = "grouped", unroll: bool = False):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits, caches)."""
+    positions = jnp.full_like(token, pos)
+    x = embed_tokens(c, p["embed"], token, positions)
+    x, caches = blocks.stack_decode(c, p["layers"], x, caches, pos,
+                                    impl=impl, enc_kv_stacked=enc_kv,
+                                    unroll=unroll)
+    x = apply_norm(c, p["final_norm"], x)
+    logits = unembed(c, p["embed"], x)
+    return logits, caches

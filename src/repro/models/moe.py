@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based scatter dispatch.
+
+Dispatch is gather/scatter based (argsort-free GShard-style positions via
+cumsum ranking), NOT the one-hot einsum formulation — the einsum dispatch is
+O(T^2) FLOPs per group and would dominate the roofline. With the expert dim
+sharded over the mesh ``model`` axis, GSPMD lowers the scatter/gather pair
+to all-to-all collectives (expert parallelism).
+
+``moe_forward_dense`` is the pure/naive oracle used by tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from contextvars import ContextVar
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_mlp, dense_init, mlp_init, param_dtype_of
+
+Params = Any
+
+# Dispatch implementation: "scatter" (capacity-based, lowers to all-to-all
+# when experts are sharded over the tp axis) or "dense" (masked batched
+# einsum over ALL experts — compute overhead E/top_k, but no scatter; the
+# right choice when E doesn't divide the tp axis, where GSPMD would
+# replicate the (E*C, D) dispatch buffer on every device).
+_MOE_IMPL: ContextVar[str] = ContextVar("moe_impl", default="scatter")
+
+# Optional sharding constraint for the dispatch buffer's feature dim.
+# Without it GSPMD materializes the (E*C, d) buffer replicated and
+# all-reduces it per MoE layer (measured 1.8 TB/step wire on llama4
+# prefill); with d sharded over tp, the expert-sharded weights pull the
+# buffer through an all-to-all instead (the intended EP dataflow).
+_MOE_BUF_SPEC: ContextVar = ContextVar("moe_buf_spec", default=None)
+
+
+@contextlib.contextmanager
+def moe_impl(name: str, buf_spec=None):
+    tok = _MOE_IMPL.set(name)
+    tok2 = _MOE_BUF_SPEC.set(buf_spec)
+    try:
+        yield
+    finally:
+        _MOE_IMPL.reset(tok)
+        _MOE_BUF_SPEC.reset(tok2)
+
+
+def _buf_hint(x):
+    spec = _MOE_BUF_SPEC.get()
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_init(key, c: ModelConfig) -> Params:
+    pd = param_dtype_of(c)
+    eff = c.expert_d_ff or c.d_ff
+    ks = jax.random.split(key, c.n_experts + 2)
+    experts = [mlp_init(ks[i], c, eff) for i in range(c.n_experts)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *experts)
+    p = {
+        "router": dense_init(ks[-1], c.d_model, c.n_experts, jnp.float32),
+        "experts": stacked,
+    }
+    if c.moe_shared:
+        p["shared"] = mlp_init(ks[-2], c, eff)
+    return p
+
+
+def router_topk(c: ModelConfig, p: Params, x2d: jax.Array):
+    """x2d: (T, D) -> (weights (T,k), experts (T,k), aux_loss scalar)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    weights, experts = jax.lax.top_k(probs, c.top_k)            # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    T = x2d.shape[0]
+    me = probs.mean(axis=0)                                     # (E,)
+    one_hot = jax.nn.one_hot(experts[:, 0], c.n_experts, dtype=jnp.float32)
+    ce = one_hot.mean(axis=0)
+    aux = c.n_experts * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def expert_capacity(c: ModelConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * c.top_k * c.capacity_factor / c.n_experts))
+    return max(cap, 4)
+
+
+def _apply_experts(c: ModelConfig, experts: Params, buf: jax.Array) -> jax.Array:
+    """buf: (E, C, D) -> (E, C, D) via per-expert MLP (batched einsum)."""
+    if c.act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, experts["wi_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, experts["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, experts["wi"])
+        if "bi" in experts:
+            h = h + experts["bi"][:, None]
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("ecf,efd->ecd", h, experts["wo"])
+    if "bo" in experts:
+        out = out + experts["bo"][:, None]
+    return out
+
+
+def moe_forward(c: ModelConfig, p: Params, x: jax.Array):
+    """x: (B, S, D) -> (y (B,S,D), aux_loss)."""
+    if _MOE_IMPL.get() == "dense":
+        return moe_forward_einsum(c, p, x)
+    b, s, d = x.shape
+    T = b * s
+    x2d = x.reshape(T, d)
+    weights, experts_idx, aux = router_topk(c, p, x2d)
+    C = expert_capacity(c, T)
+    E = c.n_experts
+
+    # position of each (token, choice) within its expert, via cumsum ranking
+    sel = jax.nn.one_hot(experts_idx, E, dtype=jnp.int32)       # (T, k, E)
+    sel_flat = sel.reshape(T * c.top_k, E)
+    pos = jnp.cumsum(sel_flat, axis=0) * sel_flat - 1           # (T*k, E)
+    pos_in_expert = pos.max(axis=-1)                            # (T*k,)
+    keep = (pos_in_expert >= 0) & (pos_in_expert < C)
+    dest = experts_idx.reshape(-1) * C + jnp.clip(pos_in_expert, 0, C - 1)
+    dest = jnp.where(keep, dest, E * C)                         # overflow slot
+
+    xk = jnp.repeat(x2d, c.top_k, axis=0)                       # (T*k, D)
+    buf = _buf_hint(jnp.zeros((E * C + 1, d), x.dtype).at[dest].add(xk))
+    buf = buf[:-1].reshape(E, C, d)
+
+    out_buf = _apply_experts(c, p["experts"], buf).reshape(E * C, d)
+    out_buf = _buf_hint(
+        jnp.concatenate([out_buf, jnp.zeros((1, d), x.dtype)]))
+
+    gathered = out_buf[dest]                                    # (T*k, D)
+    wk = (weights.reshape(-1, 1) * keep[:, None]).astype(x.dtype)
+    y = (gathered * wk).reshape(T, c.top_k, d).sum(axis=1)
+
+    if c.moe_shared:
+        y = y + apply_mlp(c, p["shared"], x2d)
+    return y.reshape(b, s, d), aux
+
+
+def moe_forward_einsum(c: ModelConfig, p: Params, x: jax.Array):
+    """Masked batched-einsum MoE (all experts on all tokens; no dropping).
+
+    Shards cleanly with the expert FFN dim over tp: (T, E, F) activations
+    stay local, the combine einsum contracts (E, F) -> one small AR. Used
+    for archs whose expert count doesn't divide the tp axis (DESIGN.md
+    par.5: granite-moe's 40 experts vs the 16-way model axis).
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    weights, experts_idx, aux = router_topk(c, p, x2d)
+    # dense (T, E) weight matrix with zeros for unrouted experts
+    wfull = jnp.zeros((b * s, c.n_experts), jnp.float32)
+    wfull = wfull.at[jnp.arange(b * s)[:, None], experts_idx].set(weights)
+    ex = p["experts"]
+    if c.act == "swiglu":
+        g = jnp.einsum("td,edf->tef", x2d, ex["wi_gate"])
+        u = jnp.einsum("td,edf->tef", x2d, ex["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("td,edf->tef", x2d, ex["wi"])
+        if "bi" in ex:
+            h = h + ex["bi"][None]
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("tef,te,efd->td", h, wfull.astype(h.dtype), ex["wo"])
+    if "bo" in ex:
+        y = y + jnp.einsum("te,ed->td", wfull.astype(h.dtype), ex["bo"])
+    if c.moe_shared:
+        y = y + apply_mlp(c, p["shared"], x2d)
+    return y.reshape(b, s, d), aux
+
+
+def moe_forward_dense(c: ModelConfig, p: Params, x: jax.Array):
+    """Oracle: loop over experts with dense masks (no capacity drops)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    weights, experts_idx, aux = router_topk(c, p, x2d)
+    y = jnp.zeros_like(x2d)
+    for e in range(c.n_experts):
+        pe = jax.tree.map(lambda w: w[e], p["experts"])
+        ye = apply_mlp(c, pe, x2d)
+        w_e = jnp.where(experts_idx == e, weights, 0.0).sum(-1)  # (T,)
+        y = y + ye * w_e[:, None].astype(x.dtype)
+    if c.moe_shared:
+        y = y + apply_mlp(c, p["shared"], x2d)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,110 @@
+"""ResNet50 (v1.5) in JAX — the paper's computer-vision benchmark case.
+
+Data-parallel training with an all-reduce over the mesh ``data`` axis is the
+Horovod analog used by the tf_cnn_benchmarks fork in CARAML. BatchNorm uses
+per-step batch statistics (training mode) with running stats carried in a
+separate state pytree, matching the benchmark's from-scratch training mode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet50 import ResNetConfig
+
+Params = Any
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    std = jnp.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std).astype(dtype)
+
+
+def _bn_init(ch, dtype):
+    return {"scale": jnp.ones((ch,), dtype), "bias": jnp.zeros((ch,), dtype)}
+
+
+def _bn_state(ch):
+    return {"mean": jnp.zeros((ch,), jnp.float32),
+            "var": jnp.ones((ch,), jnp.float32)}
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=(0, 1, 2))
+    var = jnp.var(xf, axis=(0, 1, 2))
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), (mean, var)
+
+
+def bottleneck_init(key, cin, width, stride, dtype):
+    ks = jax.random.split(key, 4)
+    cout = width * 4
+    p = {
+        "conv1": _conv_init(ks[0], 1, 1, cin, width, dtype), "bn1": _bn_init(width, dtype),
+        "conv2": _conv_init(ks[1], 3, 3, width, width, dtype), "bn2": _bn_init(width, dtype),
+        "conv3": _conv_init(ks[2], 1, 1, width, cout, dtype), "bn3": _bn_init(cout, dtype),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[3], 1, 1, cin, cout, dtype)
+        p["bn_proj"] = _bn_init(cout, dtype)
+    return p
+
+
+def bottleneck(p, x, stride):
+    h, _ = batchnorm(p["bn1"], conv(x, p["conv1"]))
+    h = jax.nn.relu(h)
+    h, _ = batchnorm(p["bn2"], conv(h, p["conv2"], stride))
+    h = jax.nn.relu(h)
+    h, _ = batchnorm(p["bn3"], conv(h, p["conv3"]))
+    sc = x
+    if "proj" in p:
+        sc, _ = batchnorm(p["bn_proj"], conv(x, p["proj"], stride))
+    return jax.nn.relu(h + sc)
+
+
+def init(key, c: ResNetConfig) -> Params:
+    dtype = jnp.dtype(c.param_dtype)
+    keys = jax.random.split(key, 3 + sum(c.stage_sizes))
+    ki = iter(keys)
+    p = {"stem": _conv_init(next(ki), 7, 7, 3, c.width, dtype),
+         "bn_stem": _bn_init(c.width, dtype), "stages": []}
+    cin = c.width
+    for s, n_blocks in enumerate(c.stage_sizes):
+        width = c.width * (2 ** s)
+        stage = []
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            stage.append(bottleneck_init(next(ki), cin, width, stride, dtype))
+            cin = width * 4
+        p["stages"].append(stage)
+    p["head"] = (jax.random.normal(next(ki), (cin, c.n_classes), jnp.float32)
+                 * 0.01).astype(dtype)
+    p["head_b"] = jnp.zeros((c.n_classes,), dtype)
+    return p
+
+
+def forward(c: ResNetConfig, p: Params, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    x = images.astype(jnp.dtype(c.dtype))
+    x = conv(x, p["stem"], stride=2)
+    x, _ = batchnorm(p["bn_stem"], x)
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for s, stage in enumerate(p["stages"]):
+        for b, block in enumerate(stage):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = bottleneck(block, x, stride)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head"] + p["head_b"]

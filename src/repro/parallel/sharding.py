@@ -1,0 +1,356 @@
+"""Table-driven sharding rules: DP / TP / FSDP / EP / sequence sharding.
+
+Every (arch x shape x mesh) combination must compile — rules use a
+divisible-or-replicate fallback so no assignment can fail, and the roofline
+report then grades the quality of what was chosen.
+
+Layout summary (see DESIGN.md par.5):
+  - "model" axis: tensor parallel (attention heads / d_ff / experts / vocab)
+  - "data" axis:  batch DP + FSDP weight sharding for large archs +
+                  ZeRO-1 optimizer-state sharding (Megatron's
+                  "distributed optimizer", which the paper's benchmark uses)
+  - "pod" axis:   extra DP (gradient all-reduce only — the cross-pod DCN
+                  link carries the lowest-frequency collective)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import axis_size, dp_axes
+
+Params = Any
+
+# FSDP threshold: params whose bf16 bytes / TP shard would crowd a 16 GiB
+# v5e chip once grads + ZeRO-1 states are added (see DESIGN.md).
+FSDP_PARAM_THRESHOLD = 32e9
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Resolved parallel layout for one (arch, mesh, shape) cell."""
+
+    mesh: Mesh
+    dp: tuple[str, ...]          # batch axes
+    tp: str                      # tensor-parallel axis name
+    tp_size: int
+    fsdp: bool                   # shard weights over "data" as well
+    tp_heads: bool               # Megatron head-TP possible
+    ep: bool                     # experts sharded over tp axis
+    seq_axis: Optional[str]      # shard cache sequence dim (long-context)
+    attn_impl: str               # "repeat" | "grouped"
+    use_tp: bool = True          # False: model axis becomes extra DP
+    seq_parallel: bool = False   # Megatron SP: shard resid seq over tp
+    moe_dshard: bool = False     # constrain MoE dispatch buffer d over tp
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return "data" if self.fsdp else None
+
+
+def make_plan(c: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+              *, force_fsdp: Optional[bool] = None) -> Plan:
+    tp = "model"
+    tp_size = axis_size(mesh, tp)
+    dp = dp_axes(mesh)
+    tp_heads = c.n_heads > 0 and c.n_heads % tp_size == 0
+    fsdp = (c.param_count() > FSDP_PARAM_THRESHOLD
+            if force_fsdp is None else force_fsdp)
+    ep = c.n_experts > 0 and c.n_experts % tp_size == 0
+    seq_axis = "data" if (shape.kind == "decode"
+                          and shape.global_batch < axis_size(mesh, "data")) else None
+    return Plan(mesh=mesh, dp=dp, tp=tp, tp_size=tp_size, fsdp=fsdp,
+                tp_heads=tp_heads, ep=ep, seq_axis=seq_axis,
+                attn_impl="repeat" if tp_heads else "grouped")
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    return axis is not None and n % axis_size(mesh, axis) == 0
+
+
+def _spec(plan: Plan, shape: tuple[int, ...], wants: list[tuple[int, Optional[str]]],
+          stacked: bool) -> P:
+    """Build a PartitionSpec from (dim, axis) requests; skip non-divisible.
+
+    ``wants`` dims are indices into the UNSTACKED shape; ``stacked`` shifts
+    them by one for the scan-stacked leading layer dim.
+    """
+    off = 1 if stacked else 0
+    parts: list[Optional[str]] = [None] * len(shape)
+    used: set[str] = set()
+    for dim, axis in wants:
+        d = dim + off
+        if axis == plan.tp and not plan.use_tp:
+            axis = None  # dp-only layout: model axis carries batch instead
+        if axis is None or axis in used or d >= len(shape):
+            continue
+        if shape[d] % axis_size(plan.mesh, axis) == 0:
+            parts[d] = axis
+            used.add(axis)
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(c: ModelConfig, plan: Plan, path: tuple[str, ...],
+                shape: tuple[int, ...]) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    stacked = "layers" in names  # scan-stacked leading dim
+    fa = plan.fsdp_axis
+    if not plan.use_tp:
+        import dataclasses as _dc
+        plan = _dc.replace(plan, tp_heads=False, ep=False)
+
+    # --- embeddings -----------------------------------------------------
+    if parent == "embed" or (parent == "encoder" and leaf == "pos"):
+        if leaf in ("tok", "head"):
+            return _spec(plan, shape, [(0, plan.tp), (1, fa)], False)
+        if leaf == "pos":
+            return _spec(plan, shape, [(0, plan.tp)], False)
+
+    # --- attention ------------------------------------------------------
+    # Head-TP (Megatron column/row) when n_heads divides the tp axis.
+    # Fallback: attention weights REPLICATED over tp (FSDP over data only).
+    # Contracting-dim TP was measured to make GSPMD all-reduce the O(S*T)
+    # score tensors (EXPERIMENTS.md par.Perf) — strictly worse than
+    # replicating the (small) attention compute for these archs.
+    if parent in ("attn", "cross"):
+        # FSDP archs additionally shard the head_dim over tp (2D weight
+        # sharding; GSPMD all-gathers just-in-time) so nothing stays
+        # 16x-replicated on the model axis.
+        dh_tp = plan.tp if plan.fsdp else None
+        if leaf == "wq":
+            if plan.tp_heads:
+                return _spec(plan, shape, [(1, fa), (2, plan.tp)], stacked)
+            return _spec(plan, shape, [(1, fa), (3, dh_tp)], stacked)
+        if leaf in ("wk", "wv"):
+            kvh = c.n_kv_heads
+            if plan.tp_heads and kvh % plan.tp_size == 0:
+                return _spec(plan, shape, [(1, fa), (2, plan.tp)], stacked)
+            return _spec(plan, shape, [(1, fa), (3, dh_tp)], stacked)
+        if leaf == "wo":
+            if plan.tp_heads:
+                return _spec(plan, shape, [(0, plan.tp), (2, fa)], stacked)
+            return _spec(plan, shape, [(2, fa), (1, dh_tp)], stacked)
+        return P()  # biases
+
+    # --- dense mlp / shared expert --------------------------------------
+    if parent in ("mlp", "shared"):
+        if leaf in ("wi", "wi_gate", "wi_up"):
+            return _spec(plan, shape, [(1, plan.tp), (0, fa)], stacked)
+        if leaf == "wo":
+            return _spec(plan, shape, [(0, plan.tp), (1, fa)], stacked)
+        return P()
+
+    # --- moe experts -----------------------------------------------------
+    if parent == "experts":
+        # unstacked leaf shape: (E, D, F) or (E, F, D)
+        if plan.ep:
+            if leaf in ("wi", "wi_gate", "wi_up"):
+                return _spec(plan, shape, [(0, plan.tp), (2, fa)], stacked)
+            if leaf == "wo":
+                return _spec(plan, shape, [(0, plan.tp), (1, fa)], stacked)
+            return _spec(plan, shape, [(0, plan.tp)], stacked)
+        # E not divisible: TP inside the expert FFN dim
+        if leaf in ("wi", "wi_gate", "wi_up"):
+            return _spec(plan, shape, [(2, plan.tp), (1, fa)], stacked)
+        if leaf == "wo":
+            return _spec(plan, shape, [(1, plan.tp), (2, fa)], stacked)
+        return P()
+    if leaf == "router":
+        return P()
+
+    # --- mamba ------------------------------------------------------------
+    if parent == "mamba":
+        if leaf == "in_proj":
+            return _spec(plan, shape, [(0, fa)], stacked)
+        if leaf == "out_proj":
+            return _spec(plan, shape, [(0, fa)], stacked)
+        return P()
+
+    # --- norms, scalars ----------------------------------------------------
+    return P()
+
+
+def param_shardings(c: ModelConfig, plan: Plan, abstract_params: Params):
+    """Map an (abstract) param pytree to NamedShardings."""
+
+    def rule(path, leaf):
+        spec = _param_rule(c, plan, path, tuple(leaf.shape))
+        return NamedSharding(plan.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def shard_abstract(tree, shardings):
+    """Attach shardings to a ShapeDtypeStruct pytree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding (ZeRO-1 / Megatron distributed optimizer)
+# ---------------------------------------------------------------------------
+
+
+def zero1_sharding(plan: Plan, param_sharding: NamedSharding,
+                   shape: tuple[int, ...]) -> NamedSharding:
+    """Extra-shard optimizer state over every unused mesh axis.
+
+    ZeRO-1 classically shards over DP only; we extend to any axis the
+    parameter itself doesn't use (e.g. non-head-TP archs leave "model"
+    free on their attention weights — fp32 m/v/master would otherwise be
+    replicated 16x there)."""
+    spec = list(param_sharding.spec)
+    spec += [None] * (len(shape) - len(spec))
+    if not shape:
+        return NamedSharding(plan.mesh, P(*spec))
+    used: set = set()
+    for part in spec:
+        for a in (part if isinstance(part, tuple) else (part,)):
+            if a:
+                used.add(a)
+    for axis in ("data", "model", "pod"):
+        if axis in used or axis not in plan.mesh.axis_names:
+            continue
+        asz = axis_size(plan.mesh, axis)
+        candidates = [i for i in range(len(shape))
+                      if spec[i] is None and shape[i] % asz == 0]
+        if candidates:
+            i = max(candidates, key=lambda i: shape[i])
+            spec[i] = axis
+            used.add(axis)
+    return NamedSharding(plan.mesh, P(*spec))
+
+
+def opt_state_shardings(plan: Plan, param_shardings_tree, abstract_params):
+    def rule(sh, leaf):
+        return zero1_sharding(plan, sh, tuple(leaf.shape))
+    return jax.tree.map(rule, param_shardings_tree, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache sharding
+# ---------------------------------------------------------------------------
+
+
+def batch_sharding(plan: Plan, shape: tuple[int, ...],
+                   batch_dim: int = 0) -> NamedSharding:
+    parts: list = [None] * len(shape)
+    b = shape[batch_dim]
+    if b % _dp_size(plan) == 0:
+        parts[batch_dim] = plan.dp
+    elif b % axis_size(plan.mesh, "data") == 0:
+        parts[batch_dim] = "data"
+    return NamedSharding(plan.mesh, P(*parts))
+
+
+def cache_sharding(c: ModelConfig, plan: Plan, path: tuple, shape) -> NamedSharding:
+    """KV/SSM cache sharding. Stacked leading layer dim, then batch.
+
+    attn k/v: (L, B, T, Kh, Dh); mamba conv: (L, B, K-1, CH); ssm:
+    (L, B, nh, hp, ns). Batch over dp when divisible; long-context decode
+    (batch < data axis) shards the sequence dim instead.
+    """
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    mesh = plan.mesh
+    parts: list = [None] * len(shape)
+    bdim = 1
+    if shape[bdim] % _dp_size(plan) == 0:
+        parts[bdim] = plan.dp
+    elif shape[bdim] % axis_size(mesh, "data") == 0:
+        parts[bdim] = "data"
+    if leaf in ("k", "v"):
+        if parts[bdim] is None and plan.seq_axis and shape[2] % axis_size(mesh, plan.seq_axis) == 0:
+            parts[2] = plan.seq_axis      # sequence-sharded KV
+        if shape[3] % plan.tp_size == 0:
+            parts[3] = plan.tp            # kv heads
+        elif shape[4] % plan.tp_size == 0:
+            parts[4] = plan.tp            # head dim
+    elif leaf == "ssm":
+        if shape[2] % plan.tp_size == 0:
+            parts[2] = plan.tp            # ssm heads
+    return NamedSharding(mesh, P(*parts))
+
+
+def _dp_size(plan: Plan) -> int:
+    n = 1
+    for a in plan.dp:
+        n *= axis_size(plan.mesh, a)
+    return n
+
+
+def make_attn_hints(c: ModelConfig, plan: Plan, batch: int,
+                    cache_seq: int = 0, decode: bool = False,
+                    seq_len: int = 0):
+    """Attention sharding hints (see repro.models.attention): explicit
+    q/k/v/out constraints so remat-recomputed backward keeps the forward
+    layout instead of replicating score tensors. Decode keeps heads
+    unsharded (grouped einsum against the Kh/Dh-sharded cache)."""
+    from repro.models.attention import AttnShardingHints
+    mesh, tp = plan.mesh, plan.tp
+
+    def bspec(b):
+        if b % _dp_size(plan) == 0:
+            return plan.dp
+        if b % axis_size(mesh, "data") == 0:
+            return "data"
+        return None
+
+    bs = bspec(batch)
+    h_ax = tp if (plan.tp_heads and not decode) else None
+    kv_ax = tp if (plan.tp_heads and not decode
+                   and c.n_kv_heads % plan.tp_size == 0) else None
+    q_spec = P(bs, None, h_ax, None)
+    kv_spec = P(bs, None, kv_ax, None)
+    cache_spec = None
+    if cache_seq:
+        parts = [bs, None, None, None]
+        if bs is None and plan.seq_axis and cache_seq % axis_size(
+                mesh, plan.seq_axis) == 0:
+            parts[1] = plan.seq_axis
+        if c.n_kv_heads and c.n_kv_heads % plan.tp_size == 0:
+            parts[2] = tp
+        elif c.d_head and c.d_head % plan.tp_size == 0:
+            parts[3] = tp
+        cache_spec = P(*parts)
+    # Megatron sequence parallelism: shard the residual stream's sequence
+    # dim over tp between blocks (AR becomes RS+AG: half the wire bytes)
+    sp_ax = (plan.tp if (plan.seq_parallel and seq_len
+                         and seq_len % plan.tp_size == 0) else None)
+    return AttnShardingHints(q_spec=q_spec, kv_spec=kv_spec,
+                             out_spec=q_spec, cache_spec=cache_spec,
+                             resid_spec=P(bs, sp_ax, None))
+
+
+def logits_sharding(plan: Plan, shape: tuple[int, ...]) -> NamedSharding:
+    parts: list = [None] * len(shape)
+    if shape[0] % _dp_size(plan) == 0:
+        parts[0] = plan.dp
+    elif shape[0] % axis_size(plan.mesh, "data") == 0:
+        parts[0] = "data"
+    if shape[-1] % plan.tp_size == 0:
+        parts[-1] = plan.tp
+    return NamedSharding(plan.mesh, P(*parts))
+
+
+def replicated(plan: Plan) -> NamedSharding:
+    return NamedSharding(plan.mesh, P())

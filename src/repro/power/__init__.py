@@ -1,0 +1,10 @@
+from repro.power.ctxmgr import MeasuredScope, get_power
+from repro.power.frame import Frame
+from repro.power.methods import (
+    METHODS, PowerMethod, RaplPower, SyntheticPower, TPUModelPower, get_method,
+)
+
+__all__ = [
+    "MeasuredScope", "get_power", "Frame", "METHODS", "PowerMethod",
+    "RaplPower", "SyntheticPower", "TPUModelPower", "get_method",
+]

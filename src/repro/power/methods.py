@@ -1,0 +1,145 @@
+"""Power-measurement methods (jpwr's pluggable backend architecture).
+
+Each method exposes ``read() -> dict[device_name, watts]`` plus metadata.
+Methods mirror jpwr's: where jpwr has pynvml / rocm-smi / gcipuinfo /
+GH200-sysfs, we provide:
+
+  rapl       — Linux powercap sysfs (real counters where the host has them;
+               the direct analog of jpwr's `gh` hwmon-sysfs method)
+  tpu_model  — analytic TPU v5e power model driven by a utilization source
+               (roofline occupancy of the compiled step); TPUs expose no
+               user-space power counter, see DESIGN.md par.2.1
+  synthetic  — deterministic waveform, for tests and CI
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class PowerMethod:
+    name = "base"
+
+    def devices(self) -> list[str]:
+        raise NotImplementedError
+
+    def read(self) -> dict[str, float]:
+        """Instantaneous power per device, in watts."""
+        raise NotImplementedError
+
+    def available(self) -> bool:
+        return True
+
+
+class SyntheticPower(PowerMethod):
+    """Deterministic device power: P(t) = base + amp * tri(t/period)."""
+
+    name = "synthetic"
+
+    def __init__(self, n_devices: int = 1, base: float = 100.0,
+                 amp: float = 0.0, period: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.n, self.base, self.amp, self.period = n_devices, base, amp, period
+        self.clock = clock
+        self._t0 = clock()
+
+    def devices(self):
+        return [f"synthetic:{i}" for i in range(self.n)]
+
+    def read(self):
+        t = (self.clock() - self._t0) / self.period
+        tri = abs(2 * (t - int(t)) - 1)  # triangle wave in [0, 1]
+        p = self.base + self.amp * tri
+        return {d: p for d in self.devices()}
+
+
+class RaplPower(PowerMethod):
+    """Linux powercap (intel-rapl) sysfs energy counters -> watts."""
+
+    name = "rapl"
+    ROOT = "/sys/class/powercap"
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or self.ROOT
+        self._zones = []
+        if os.path.isdir(self.root):
+            for z in sorted(os.listdir(self.root)):
+                p = os.path.join(self.root, z, "energy_uj")
+                if os.path.exists(p):
+                    self._zones.append((z, p))
+        self._last: dict[str, tuple[float, float]] = {}
+
+    def available(self) -> bool:
+        if not self._zones:
+            return False
+        try:
+            with open(self._zones[0][1]) as f:
+                f.read()
+            return True
+        except OSError:
+            return False
+
+    def devices(self):
+        return [z for z, _ in self._zones]
+
+    def read(self):
+        out = {}
+        now = time.monotonic()
+        for z, p in self._zones:
+            try:
+                with open(p) as f:
+                    uj = float(f.read().strip())
+            except OSError:
+                continue
+            if z in self._last:
+                uj0, t0 = self._last[z]
+                dt = max(now - t0, 1e-6)
+                d_uj = uj - uj0
+                if d_uj < 0:  # counter wrap
+                    d_uj = uj
+                out[z] = d_uj / dt / 1e6
+            else:
+                out[z] = 0.0
+            self._last[z] = (uj, now)
+        return out
+
+
+# TPU v5e power envelope (per chip). Idle fraction per public v5e studies.
+TPU_V5E_TDP_W = 220.0
+TPU_V5E_IDLE_W = 60.0
+
+
+class TPUModelPower(PowerMethod):
+    """Analytic TPU power: P = P_idle + (P_TDP - P_idle) * utilization.
+
+    ``utilization_fn`` is supplied by the benchmark runner: typically the
+    roofline occupancy of the running step (compute_term / step_time from
+    the dry-run artifact), or a live duty-cycle estimate.
+    """
+
+    name = "tpu_model"
+
+    def __init__(self, n_devices: int = 1,
+                 utilization_fn: Optional[Callable[[], float]] = None,
+                 tdp_w: float = TPU_V5E_TDP_W, idle_w: float = TPU_V5E_IDLE_W):
+        self.n = n_devices
+        self.utilization_fn = utilization_fn or (lambda: 0.0)
+        self.tdp_w, self.idle_w = tdp_w, idle_w
+
+    def devices(self):
+        return [f"tpu_v5e:{i}" for i in range(self.n)]
+
+    def read(self):
+        u = min(max(float(self.utilization_fn()), 0.0), 1.0)
+        p = self.idle_w + (self.tdp_w - self.idle_w) * u
+        return {d: p for d in self.devices()}
+
+
+METHODS = {"synthetic": SyntheticPower, "rapl": RaplPower,
+           "tpu_model": TPUModelPower}
+
+
+def get_method(name: str, **kw) -> PowerMethod:
+    return METHODS[name](**kw)

@@ -1,0 +1,39 @@
+"""Inspect the largest tensors in a compiled HLO module (debug/perf tool).
+
+Used in the par.Perf hillclimbs to find which buffers dominate the memory
+term — the dry-run "profile" in lieu of a real-TPU trace.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+          "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+          "pred": 1}
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred)"
+                       r"\[([0-9,]+)\]")
+
+
+def largest_shapes(hlo_text: str, top: int = 20) -> list[tuple[float, int, str]]:
+    """Returns [(bytes, count, shape_str)] sorted by bytes desc."""
+    sizes: dict[str, int] = {}
+    counts: Counter = Counter()
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dt, dims = m.group(1), m.group(2)
+        key = f"{dt}[{dims}]"
+        counts[key] += 1
+        if key not in sizes:
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            sizes[key] = n * _BYTES[dt]
+    out = [(float(sizes[k]), counts[k], k) for k in sizes]
+    out.sort(reverse=True)
+    return out[:top]
+
+
+def print_largest(compiled, top: int = 15):
+    for b, cnt, shape in largest_shapes(compiled.as_text(), top):
+        print(f"{b / 2**30:8.2f} GiB  x{cnt:4d}  {shape}")

@@ -1,0 +1,114 @@
+"""Parse compiled HLO text for collective ops and their byte volumes.
+
+``cost_analysis()`` does not report collective bytes, so we scan the
+post-SPMD (compiled) HLO for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops and sum operand/result sizes.
+
+Byte accounting is per-device "wire bytes" (what crosses links), using ring
+estimates with the parsed replica-group size g:
+  all-reduce       2 * B * (g-1)/g      (B = result bytes = operand bytes)
+  all-gather       B_result * (g-1)/g   (received shards)
+  reduce-scatter   B_operand * (g-1)/g  = B_result * (g-1)
+  all-to-all       B * (g-1)/g
+  collective-permute  B                 (point-to-point)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,512]{2,1,0} all-gather(...) or
+#       ... = (f32[128]{0}, f32[128]{0}) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).strip("{}").split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    result_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def total_result_bytes(self) -> int:
+        return int(sum(self.result_bytes.values()))
+
+    def to_dict(self) -> dict:
+        return {
+            "counts": dict(self.counts),
+            "result_bytes": dict(self.result_bytes),
+            "wire_bytes": dict(self.wire_bytes),
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done: set[str] = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = shape_bytes(m.group("type"))
+        g = _group_size(line, n_devices)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            wire = 2.0 * b * frac
+        elif op == "all-gather":
+            wire = b * frac
+        elif op == "reduce-scatter":
+            wire = b * (g - 1)  # operand = result * g
+        elif op == "all-to-all":
+            wire = b * frac
+        else:  # collective-permute
+            wire = float(b)
+        stats.counts[op] += 1
+        stats.result_bytes[op] += b
+        stats.wire_bytes[op] += wire
+    return stats

@@ -1,0 +1,32 @@
+"""KV / SSM cache construction (abstract + concrete)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, lm
+
+Params = Any
+
+
+def abstract_caches(c: ModelConfig, batch: int, seq_len: int,
+                    abstract_params: Params):
+    """Cache/enc_kv ShapeDtypeStructs via eval_shape on prefill (no alloc)."""
+    kw = {}
+    s_text = seq_len - (c.n_patches if c.family == "vlm" else 0)
+    tokens = jax.ShapeDtypeStruct((batch, s_text), jnp.int32)
+    if c.family == "vlm":
+        kw["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, c.n_patches, c.d_model), jnp.dtype(c.dtype))
+    if c.family == "encdec":
+        kw["enc_frames"] = jax.ShapeDtypeStruct(
+            (batch, c.enc_seq, c.d_model), jnp.dtype(c.dtype))
+
+    def run(p, t, kwargs):
+        logits, caches, enc_kv = lm.prefill(c, p, t, **kwargs)
+        return caches, enc_kv
+
+    return jax.eval_shape(run, abstract_params, tokens, kw), kw

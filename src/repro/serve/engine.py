@@ -1,0 +1,95 @@
+"""Serving engine: batched prefill + decode with donated caches.
+
+``serve_step`` (single-token decode against a full KV cache) is what the
+``decode_*`` / ``long_*`` dry-run shapes lower. The BatchedServer is the
+runnable driver used by the serving example/benchmark: fixed-batch
+continuous decoding with greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+Params = Any
+
+
+def make_prefill_fn(c: ModelConfig, impl: str = "repeat"):
+    def prefill_step(params, tokens, extras):
+        logits, caches, enc_kv = lm.prefill(
+            c, params, tokens,
+            patch_embeds=extras.get("patch_embeds"),
+            enc_frames=extras.get("enc_frames"), impl=impl)
+        return logits, caches, enc_kv
+    return prefill_step
+
+
+def make_decode_fn(c: ModelConfig, impl: str = "grouped"):
+    def serve_step(params, token, caches, pos, enc_kv=None):
+        return lm.decode_step(c, params, token, caches, pos,
+                              enc_kv=enc_kv, impl=impl)
+    return serve_step
+
+
+@dataclass
+class GenerationResult:
+    tokens: Any
+    steps: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        n = self.tokens.shape[0] * self.steps
+        return n / max(self.decode_s, 1e-9)
+
+
+class BatchedServer:
+    """Fixed-batch greedy decoding driver (benchmark/serving example)."""
+
+    def __init__(self, c: ModelConfig, params: Params, *,
+                 max_len: int = 256, impl_prefill: str = "repeat",
+                 impl_decode: str = "grouped", donate: bool = True):
+        self.c, self.params, self.max_len = c, params, max_len
+        self._prefill = jax.jit(make_prefill_fn(c, impl_prefill))
+        decode = make_decode_fn(c, impl_decode)
+        self._decode = jax.jit(decode, donate_argnums=(2,) if donate else ())
+
+    def generate(self, tokens: jax.Array, n_steps: int,
+                 extras: Optional[dict] = None) -> GenerationResult:
+        extras = extras or {}
+        b, s = tokens.shape
+        t0 = time.perf_counter()
+        logits, caches, enc_kv = self._prefill(self.params, tokens, extras)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+        # grow KV caches to max_len so decode can append
+        caches = jax.tree_util.tree_map_with_path(self._grow, caches)
+        out = [jnp.argmax(logits[:, -1], -1).astype(jnp.int32)]
+        pos = s
+        for _ in range(n_steps - 1):
+            tok = out[-1][:, None]
+            logits, caches = self._decode(self.params, tok, caches,
+                                          jnp.int32(pos), enc_kv)
+            out.append(jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
+            pos += 1
+        out[-1].block_until_ready()
+        t2 = time.perf_counter()
+        return GenerationResult(jnp.stack(out, 1), n_steps, t1 - t0, t2 - t1)
+
+    def _grow(self, path, leaf: jax.Array) -> jax.Array:
+        # KV caches have layout (L, B, T, ...); pad T up to prompt+max_len.
+        # SSM/conv states are fixed-size and pass through untouched.
+        name = getattr(path[-1], "key", None)
+        if name in ("k", "v"):
+            widths = [(0, 0)] * leaf.ndim
+            widths[2] = (0, self.max_len)
+            return jnp.pad(leaf, widths)
+        return leaf

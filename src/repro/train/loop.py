@@ -1,0 +1,95 @@
+"""Training loop with the fault-tolerance features the paper's scale needs:
+auto-resume from the latest checkpoint, async periodic checkpointing,
+straggler watchdog, power measurement hooks, throughput accounting.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager, latest_step, restore
+from repro.core.metrics import tokens_per_s
+from repro.core.runner import StragglerWatchdog
+
+Params = Any
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    seq_len: int = 512
+    global_batch: int = 8
+    keep_ckpts: int = 3
+
+
+@dataclass
+class LoopResult:
+    steps_run: int
+    final_step: int
+    losses: list
+    tokens_per_s: float
+    straggler_events: list
+    resumed_from: Optional[int]
+
+
+def train_loop(train_step: Callable, params: Params, opt_state: Params,
+               data_iter, cfg: LoopConfig, *,
+               hooks: Optional[list[Callable]] = None,
+               fail_at_step: Optional[int] = None) -> LoopResult:
+    """Run training with auto-resume + async checkpointing.
+
+    ``fail_at_step`` injects a simulated failure (tests/fault-tolerance
+    example): the loop raises after that step, and a rerun with the same
+    ckpt_dir resumes from the latest checkpoint.
+    """
+    mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
+        if cfg.ckpt_dir else None
+    start_step = 0
+    resumed_from = None
+    if mgr is not None and latest_step(cfg.ckpt_dir) is not None:
+        (params, opt_state), manifest = restore(
+            (params, opt_state), cfg.ckpt_dir)
+        start_step = manifest["step"]
+        resumed_from = start_step
+
+    watchdog = StragglerWatchdog()
+    losses = []
+    t_start = time.perf_counter()
+    step = start_step
+    n_run = 0
+    for step in range(start_step, cfg.total_steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        watchdog.observe(step, dt)
+        losses.append(loss)
+        n_run += 1
+        if hooks:
+            for h in hooks:
+                h(step, metrics, dt)
+        if cfg.log_every and (step + 1) % cfg.log_every == 0:
+            tps = tokens_per_s(cfg.global_batch, cfg.seq_len, dt)
+            print(f"  step {step + 1}/{cfg.total_steps} loss={loss:.4f} "
+                  f"({dt * 1e3:.0f} ms, {tps:,.0f} tok/s)")
+        if mgr is not None and (step + 1) % cfg.ckpt_every == 0:
+            mgr.save_async((params, opt_state), step + 1)
+        if fail_at_step is not None and step + 1 >= fail_at_step:
+            if mgr is not None:
+                mgr.wait()
+            raise RuntimeError(f"injected failure at step {step + 1}")
+    if mgr is not None:
+        mgr.save_sync((params, opt_state), cfg.total_steps)
+        mgr.wait()
+    wall = time.perf_counter() - t_start
+    tps = (n_run * cfg.global_batch * cfg.seq_len) / max(wall, 1e-9)
+    return LoopResult(n_run, step + 1 if n_run else start_step, losses, tps,
+                      watchdog.events, resumed_from)

@@ -1,0 +1,35 @@
+"""Losses: next-token cross-entropy (fp32), router aux, z-loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+IGNORE = -1
+
+
+def next_token_loss(c: ModelConfig, logits: jax.Array, labels: jax.Array,
+                    z_coef: float = 0.0):
+    """logits: (B, S, V); labels: (B, S) with IGNORE masked. fp32 softmax."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # vocab-parallel gather: one-hot contraction keeps the vocab dim sharded
+    # (take_along_axis on a sharded dim would all-gather the logits)
+    tgt = jnp.clip(labels, 0, c.padded_vocab - 1)
+    vpos = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(vpos == tgt[..., None], lf, 0.0), axis=-1)
+    nll = lse - picked
+    mask = (labels != IGNORE).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    if z_coef:
+        ce = ce + z_coef * ((lse * mask) ** 2).sum() / denom
+    return ce
+
+
+def classification_loss(logits: jax.Array, labels: jax.Array):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,149 @@
+"""Optimizers: AdamW with fp32 master weights (Megatron mixed precision)
+and Adafactor (factored second moment — the memory fallback for very large
+MoE archs). Optimizer states are sharded ZeRO-1 style by the caller
+(repro.parallel.sharding.opt_state_shardings) — the "distributed optimizer"
+the paper's Megatron-LM benchmark enables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # "adamw" | "adafactor"
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_dtype: str = "float32"
+
+
+def lr_at(oc: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay (Megatron's default schedule)."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(oc.warmup, 1), 1.0)
+    t = jnp.clip((s - oc.warmup) / jnp.maximum(oc.total_steps - oc.warmup, 1), 0, 1)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(oc: OptConfig, params: Params) -> Params:
+    md = jnp.dtype(oc.master_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(lambda p: p.astype(md), params),
+    }
+
+
+def adamw_update(oc: OptConfig, grads: Params, state: Params, params: Params):
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + oc.eps)
+        if master.ndim >= 1:  # decoupled weight decay, skip scalars/norms
+            delta = delta + oc.weight_decay * master
+        master = master - lr * delta
+        return m, v, master, master.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"], params)
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda o: o[3], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "m": m, "v": v, "master": master}
+    return new_params, new_state, {"gnorm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v, no master copy) — memory-lean fallback
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(oc: OptConfig, params: Params) -> Params:
+    def rows_cols(p):
+        if p.ndim < 2:
+            return jnp.zeros(p.shape, jnp.float32), jnp.zeros((), jnp.float32)
+        return (jnp.zeros(p.shape[:-1], jnp.float32),
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+
+    rc = jax.tree.map(rows_cols, params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "vr": jax.tree.map(lambda o: o[0], rc, is_leaf=lambda x: isinstance(x, tuple)),
+        "vc": jax.tree.map(lambda o: o[1], rc, is_leaf=lambda x: isinstance(x, tuple)),
+    }
+
+
+def adafactor_update(oc: OptConfig, grads: Params, state: Params, params: Params):
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, vr, vc, p):
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim < 2:
+            vr_n = decay * vr + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(vr_n + 1e-30)
+            return vr_n, vc, (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        vr_n = decay * vr + (1 - decay) * g2.mean(axis=-1)
+        vc_n = decay * vc + (1 - decay) * g2.mean(axis=-2)
+        r = vr_n / jnp.maximum(vr_n.mean(axis=-1, keepdims=True), 1e-30)
+        update = g * jax.lax.rsqrt(r[..., None] * vc_n[..., None, :] + 1e-30)
+        newp = p.astype(jnp.float32) - lr * (update + oc.weight_decay * p.astype(jnp.float32))
+        return vr_n, vc_n, newp.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+    vr = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    vc = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"step": step, "vr": vr, "vc": vc}, {"gnorm": gnorm, "lr": lr}
+
+
+def opt_init(oc: OptConfig, params):
+    return adamw_init(oc, params) if oc.name == "adamw" else adafactor_init(oc, params)
+
+
+def opt_update(oc: OptConfig, grads, state, params):
+    if oc.name == "adamw":
+        return adamw_update(oc, grads, state, params)
+    return adafactor_update(oc, grads, state, params)

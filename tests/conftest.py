@@ -1,0 +1,33 @@
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a snippet under a multi-device (forced host platform) jax.
+
+    Keeps the main test process at 1 device (per the dry-run contract:
+    only repro.launch.dryrun forces 512 devices).
+    """
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        "import sys\n"
+        "sys.path.insert(0, 'src')\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, cwd=".")
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_in_subprocess

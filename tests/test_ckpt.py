@@ -1,0 +1,92 @@
+"""Checkpointing: roundtrip, atomicity, retention, async, auto-resume,
+elastic rescale plans."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.ckpt.elastic import plan_rescale
+from repro.configs import SHAPES, get_config
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(t, tmp_path, step=5)
+    got, manifest = restore(t, tmp_path)
+    assert manifest["step"] == 5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, got)
+
+
+def test_latest_step_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_sync(t, s)
+    assert latest_step(tmp_path) == 4
+    assert not (tmp_path / "step_1").exists()
+    assert not (tmp_path / "step_2").exists()
+    assert (tmp_path / "step_3").exists()
+
+
+def test_atomicity_no_tmp_published(tmp_path):
+    t = _tree()
+    save(t, tmp_path, step=1)
+    leftovers = [p for p in tmp_path.iterdir() if p.name.endswith(".tmp")]
+    assert leftovers == []
+    # restore never sees a partial state: only step_N dirs count
+    assert latest_step(tmp_path) == 1
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    t = _tree()
+    mgr.save_async(t, 7)
+    mgr.wait()
+    assert latest_step(tmp_path) == 7
+    got, _ = restore(t, tmp_path)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t["a"]))
+
+
+def test_restore_casts_dtype(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    save(t, tmp_path, step=1)
+    template = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    got, _ = restore(template, tmp_path)
+    assert got["w"].dtype == jnp.bfloat16
+
+
+def test_train_loop_auto_resume(tmp_path):
+    """Inject a failure mid-training; rerun resumes from the checkpoint."""
+    from repro.launch.train import main
+    args = ["--arch", "gpt-117m", "--preset", "tiny", "--steps", "8",
+            "--global-batch", "2", "--seq-len", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+    with pytest.raises(RuntimeError, match="injected failure"):
+        main(args + ["--fail-at-step", "5"])
+    assert latest_step(tmp_path) is not None
+    res = main(args)  # resumes
+    assert res.resumed_from is not None and res.resumed_from >= 2
+    assert res.final_step == 8
+
+
+def test_elastic_rescale_plan():
+    c = get_config("granite-8b")
+    shape = SHAPES["train_4k"]
+    plan = plan_rescale(c, shape, (16, 16), lost_devices=32)
+    assert plan.new_shape[1] == 16  # TP degree preserved
+    assert plan.new_shape[0] <= 14
+    assert shape.global_batch % plan.new_shape[0] == 0
+
+    with pytest.raises(ValueError):
+        plan_rescale(c, shape, (16, 16), lost_devices=256 - 8)

@@ -1,0 +1,76 @@
+"""Config registry: param counts match published sizes; cell accounting."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED, PAPER_MODELS, REGISTRY, SHAPES, cells, get_config,
+    skipped_cells, vocab_pad,
+)
+
+# (arch, expected total params in B, expected active in B, rel tolerance)
+EXPECTED = [
+    ("granite-8b", 8.25, 8.25, 0.12),
+    ("qwen2-0.5b", 0.49, 0.49, 0.15),
+    ("command-r-35b", 30.3, 30.3, 0.2),
+    ("llama3.2-3b", 3.2, 3.2, 0.15),
+    ("whisper-small", 0.24, 0.24, 0.3),
+    ("llava-next-34b", 34.4, 34.4, 0.15),
+    ("jamba-v0.1-52b", 51.5, 12.0, 0.15),
+    ("mamba2-1.3b", 1.45, 1.45, 0.25),
+    ("granite-moe-3b-a800m", 3.3, 0.95, 0.25),
+    ("llama4-maverick-400b-a17b", 400.0, 17.0, 0.1),
+    ("gpt-117m", 0.117, 0.117, 0.15),
+    ("gpt-800m", 0.8, 0.8, 0.15),
+    ("gpt-13b", 13.0, 13.0, 0.1),
+    ("gpt-175b", 175.0, 175.0, 0.1),
+]
+
+
+@pytest.mark.parametrize("arch,total,active,tol", EXPECTED)
+def test_param_counts(arch, total, active, tol):
+    c = get_config(arch)
+    assert abs(c.param_count() / 1e9 - total) / total < tol
+    assert abs(c.active_param_count() / 1e9 - active) / active < tol
+
+
+def test_registry_complete():
+    assert len(ASSIGNED) == 10
+    assert len(PAPER_MODELS) == 4
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+
+
+def test_cells_and_skips():
+    cs = cells()
+    skips = skipped_cells()
+    # 10 archs x 4 shapes = 40 total; long_500k runs only for the
+    # sub-quadratic archs (mamba2, jamba, llama4-with-window)
+    assert len(cs) + len(skips) == 40
+    assert len(skips) == 7
+    long_ok = {c.name for c, s in cs if s.name == "long_500k"}
+    assert long_ok == {"mamba2-1.3b", "jamba-v0.1-52b",
+                       "llama4-maverick-400b-a17b"}
+
+
+def test_vocab_padding():
+    assert vocab_pad(51865) % 256 == 0
+    assert vocab_pad(51865) >= 51865
+    assert vocab_pad(49152) == 49152
+    for a in REGISTRY.values():
+        assert a.padded_vocab % 16 == 0  # model-axis shardable
+
+
+def test_reduced_configs_small():
+    for a in ASSIGNED.values():
+        r = a.reduced()
+        assert r.param_count() < 20e6, (a.name, r.param_count())
+        assert r.family == a.family
+
+
+def test_layer_patterns():
+    jamba = get_config("jamba-v0.1-52b")
+    attn_layers = [i for i in range(jamba.n_layers) if jamba.is_attn_layer(i)]
+    assert len(attn_layers) == 4  # 1:7 interleave over 32 layers
+    moe_layers = [i for i in range(jamba.n_layers) if jamba.is_moe_layer(i)]
+    assert len(moe_layers) == 16  # every 2nd layer
+    l4 = get_config("llama4-maverick-400b-a17b")
+    assert sum(l4.is_moe_layer(i) for i in range(l4.n_layers)) == 24

@@ -1,0 +1,108 @@
+"""CARAML harness: parameter spaces, runner, straggler watchdog, tables."""
+import pytest
+
+from repro.core import (
+    BenchmarkSuite, Runner, Space, Step, StragglerWatchdog, divisible_batch,
+    heatmap, table, tokens_per_s,
+)
+from repro.power.methods import SyntheticPower
+
+
+def test_space_expansion_and_constraints():
+    # the paper's exclusion: bs=16 impossible at dp=8 with micro-batch 4
+    sp = Space({"global_batch": [16, 64], "dp": [4, 8], "micro_batch": [4]},
+               [divisible_batch])
+    pts = sp.expand()
+    assert {"global_batch": 16, "dp": 8, "micro_batch": 4} not in pts
+    assert {"global_batch": 16, "dp": 4, "micro_batch": 4} in pts
+    assert len(pts) == 3
+
+
+def test_runner_executes_and_persists(tmp_path):
+    calls = []
+
+    def bench(pt, ctx):
+        calls.append(pt)
+        return {"tokens_per_s": 100.0 * pt["bs"]}
+
+    suite = BenchmarkSuite(
+        name="t", space=Space({"bs": [1, 2]}),
+        steps=[Step("run", bench)])
+    r = Runner(suite, out_dir=str(tmp_path))
+    recs = r.run(verbose=False)
+    assert len(recs) == 2
+    assert recs[1]["tokens_per_s"] == 200.0
+    assert (tmp_path / "t" / "results.json").exists()
+    assert (tmp_path / "t" / "manifest.json").exists()
+
+
+def test_runner_power_measurement(tmp_path):
+    import time
+
+    def bench(pt, ctx):
+        time.sleep(0.03)
+        return {"x": 1}
+
+    suite = BenchmarkSuite("p", Space({"bs": [1]}), [Step("run", bench)])
+    r = Runner(suite, power_methods=[SyntheticPower(base=100.0)],
+               out_dir=str(tmp_path), power_interval_ms=5)
+    recs = r.run(verbose=False)
+    assert recs[0]["run_energy_wh"] > 0
+
+
+def test_runner_retries_then_records_error(tmp_path):
+    attempts = []
+
+    def flaky(pt, ctx):
+        attempts.append(1)
+        if len(attempts) < 2:
+            raise RuntimeError("transient")
+        return {"ok": 1}
+
+    suite = BenchmarkSuite("f", Space({"bs": [1]}),
+                           [Step("run", flaky, retries=3)])
+    recs = Runner(suite, out_dir=str(tmp_path)).run(verbose=False)
+    assert recs[0]["ok"] == 1 and len(attempts) == 2
+
+    def broken(pt, ctx):
+        raise ValueError("boom")
+
+    suite2 = BenchmarkSuite("g", Space({"bs": [1]}),
+                            [Step("run", broken, retries=2)])
+    recs2 = Runner(suite2, out_dir=str(tmp_path)).run(verbose=False)
+    assert "boom" in recs2[0]["run_error"]
+
+
+def test_straggler_watchdog_flags_simulated_straggler():
+    w = StragglerWatchdog(k=3.0, warmup=3)
+    flagged = []
+    times = [0.10, 0.10, 0.11, 0.10, 0.10, 0.10, 0.95, 0.10]  # one straggler
+    for i, dt in enumerate(times):
+        if w.observe(i, dt):
+            flagged.append(i)
+    assert flagged == [6]
+    assert w.events[0]["dt"] == 0.95
+
+
+def test_straggler_watchdog_tolerates_noise():
+    w = StragglerWatchdog(k=3.0, warmup=3)
+    import random
+    rng = random.Random(0)
+    flags = sum(w.observe(i, 0.1 + rng.uniform(-0.005, 0.005))
+                for i in range(50))
+    assert flags == 0
+
+
+def test_table_and_heatmap_render():
+    recs = [{"dp": 1, "bs": 16, "tps": 100.0},
+            {"dp": 2, "bs": 16, "tps": 190.0},
+            {"dp": 2, "bs": 32, "tps": 210.0}]
+    t = table(recs)
+    assert "tps" in t and "190.00" in t
+    h = heatmap(recs, "dp", "bs", "tps")
+    assert "OOM" in h  # missing (1, 32) cell marked like the paper's Fig. 4
+    assert "210" in h
+
+
+def test_tokens_per_s():
+    assert tokens_per_s(256, 4096, 1.0) == 256 * 4096

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps
++ hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SWEEP = [
+    # b, sq, skv, h, kh, dh, causal, window, dtype
+    (1, 128, 128, 1, 1, 64, True, None, jnp.float32),
+    (2, 256, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 256, 8, 8, 128, True, None, jnp.bfloat16),
+    (2, 128, 256, 4, 4, 64, True, None, jnp.float32),     # suffix decode
+    (1, 256, 256, 6, 2, 64, True, 128, jnp.float32),      # windowed
+    (1, 512, 512, 2, 1, 128, True, 256, jnp.bfloat16),    # windowed bf16
+    (2, 256, 256, 4, 2, 64, False, None, jnp.float32),    # bidirectional
+    (1, 384, 384, 3, 3, 64, True, None, jnp.float32),     # odd heads
+]
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kh,dh,causal,window,dt", SWEEP)
+def test_flash_attention_sweep(b, sq, skv, h, kh, dh, causal, window, dt):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (b, skv, kh, dh), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (b, skv, kh, dh), jnp.float32).astype(dt)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dt))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bq=st.sampled_from([64, 128]),
+    bk=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_flash_block_size_invariance(bq, bk, seed):
+    """Property: output is independent of the block decomposition."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, impl="pallas", interpret=True,
+                            block_q=bq, block_k=bk)
+    b = ops.flash_attention(q, k, v, impl="pallas", interpret=True,
+                            block_q=256, block_k=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       scale_mag=st.floats(0.1, 100.0))
+def test_flash_softmax_invariants(seed, scale_mag):
+    """Property: attention output is a convex combination of V rows ->
+    bounded by min/max of v, and shift-invariant in q scaling direction."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32) * scale_mag
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+    out = np.asarray(ops.flash_attention(q, k, v, impl="pallas",
+                                         interpret=True))
+    assert np.all(out <= np.max(np.asarray(v)) + 1e-4)
+    assert np.all(out >= np.min(np.asarray(v)) - 1e-4)
+    assert np.all(np.isfinite(out))
+
+
+@pytest.mark.parametrize("rows,d,dt", [
+    (8, 64, jnp.float32), (37, 512, jnp.bfloat16), (300, 128, jnp.float32),
+    (1, 1024, jnp.bfloat16),
+])
+def test_rmsnorm_sweep(rows, d, dt):
+    key = jax.random.key(0)
+    x = (jax.random.normal(key, (rows, d), jnp.float32) * 3).astype(dt)
+    s = jax.random.normal(jax.random.key(1), (d,), jnp.float32)
+    want = ref.rmsnorm_ref(x, s)
+    got = ops.rmsnorm(x, s, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dt))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), mag=st.floats(0.5, 50.0))
+def test_rmsnorm_scale_invariance(seed, mag):
+    """Property: rmsnorm(c*x) ~= rmsnorm(x) for positive c in the regime
+    where the eps term is negligible (unit-scale inputs)."""
+    x = jax.random.normal(jax.random.key(seed), (4, 256), jnp.float32)
+    s = jnp.ones((256,))
+    a = np.asarray(ops.rmsnorm(x, s, impl="pallas", interpret=True))
+    b = np.asarray(ops.rmsnorm(x * mag, s, impl="pallas", interpret=True))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,110 @@
+"""jpwr-analog power measurement: integration properties (hypothesis),
+method plumbing, suffix interpolation, export."""
+import math
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.power.ctxmgr import MeasuredScope, expand_suffix, get_power
+from repro.power.frame import Frame
+from repro.power.methods import (
+    RaplPower, SyntheticPower, TPUModelPower, get_method,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_constant_power_energy_exact():
+    """Property: integrating constant power P over T seconds = P*T J."""
+    clock = FakeClock()
+    m = SyntheticPower(n_devices=2, base=150.0, amp=0.0, clock=clock)
+    scope = MeasuredScope([m], interval_ms=1e9, clock=clock)  # manual sample
+    scope._sample()
+    for t in (1.0, 2.0, 3.0):
+        clock.t = t
+        scope._sample()
+    edf, _ = scope.energy()
+    for r in edf.records():
+        assert math.isclose(r["energy_wh"], 150.0 * 3.0 / 3600.0,
+                            rel_tol=1e-9)
+        assert math.isclose(r["avg_power_w"], 150.0, rel_tol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(base=st.floats(10, 500), slope=st.floats(0, 100),
+       n=st.integers(2, 50))
+def test_linear_power_trapezoid_exact(base, slope, n):
+    """Property: trapezoid integration is exact for linear P(t)."""
+    clock = FakeClock()
+
+    class Linear(SyntheticPower):
+        def read(self):
+            return {"d0": base + slope * clock()}
+
+        def devices(self):
+            return ["d0"]
+
+    scope = MeasuredScope([Linear()], interval_ms=1e9, clock=clock)
+    for i in range(n + 1):
+        clock.t = i / n
+        scope._sample()
+    edf, _ = scope.energy()
+    want_j = base * 1.0 + slope * 0.5  # integral over [0, 1]
+    assert math.isclose(edf.records()[0]["energy_wh"], want_j / 3600,
+                        rel_tol=1e-9)
+
+
+def test_background_thread_sampling():
+    with get_power([SyntheticPower(n_devices=1, base=100.0)],
+                   interval_ms=5) as scope:
+        time.sleep(0.08)
+    assert len(scope.df) >= 5
+    e = scope.total_energy_wh()
+    assert e > 0
+
+
+def test_tpu_model_power_utilization():
+    util = {"v": 0.0}
+    m = TPUModelPower(n_devices=4, utilization_fn=lambda: util["v"])
+    assert all(abs(w - 60.0) < 1e-9 for w in m.read().values())
+    util["v"] = 1.0
+    assert all(abs(w - 220.0) < 1e-9 for w in m.read().values())
+    util["v"] = 0.5
+    assert all(abs(w - 140.0) < 1e-9 for w in m.read().values())
+
+
+def test_rapl_graceful_when_absent():
+    m = RaplPower(root="/nonexistent/powercap")
+    assert not m.available()
+    assert m.read() == {}
+
+
+def test_suffix_interpolation(monkeypatch):
+    monkeypatch.setenv("SLURM_PROCID", "7")
+    assert expand_suffix("_%q{SLURM_PROCID}") == "_7"
+    assert expand_suffix("_%q{MISSING_VAR_XYZ}") == "_"
+
+
+def test_export_csv(tmp_path):
+    with get_power([SyntheticPower(n_devices=1)], interval_ms=5) as scope:
+        time.sleep(0.02)
+    scope.export(str(tmp_path), "csv", suffix="_r0")
+    assert (tmp_path / "power_r0.csv").exists()
+    assert (tmp_path / "energy_r0.csv").exists()
+    text = (tmp_path / "energy_r0.csv").read_text()
+    assert "energy_wh" in text
+
+
+def test_frame_roundtrip():
+    f = Frame.from_records([{"a": 1, "b": 2.5}, {"a": 3, "b": None}])
+    assert f.col("a") == [1, 3]
+    csv = f.to_csv()
+    assert csv.splitlines()[0] == "a,b"
+    assert len(f) == 2

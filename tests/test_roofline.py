@@ -1,0 +1,72 @@
+"""Roofline machinery: HLO collective parsing, term model, buffer tool."""
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import analyze, model_flops
+from repro.roofline.buffers import largest_shapes
+from repro.roofline.hlo import CollectiveStats, parse_collectives, shape_bytes
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,4096,512]{2,1,0} all-gather(%p0), replica_groups=[16,16]<=[256], dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(%p1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[64,128]{1,0} reduce-scatter(%p2), replica_groups=[8,2]<=[16]
+  %cp = bf16[4,512]{1,0} collective-permute(%p3), source_target_pairs={{0,1}}
+  %a2a = f32[32,64]{1,0} all-to-all(%p4), replica_groups=[4,4]<=[16]
+  %ars = (f32[128]{0}, f32[128]{0}) all-reduce-start(%p5, %p6), replica_groups={{0,1}}
+  %ard = (f32[128]{0}, f32[128]{0}) all-reduce-done(%ars)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,4096,512]") == 16 * 4096 * 512 * 2
+    assert shape_bytes("(f32[128], f32[128])") == 1024
+    assert shape_bytes("f32[]") == 4
+
+
+def test_parse_collectives_counts_and_groups():
+    st = parse_collectives(HLO, 256)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 2          # plain + start (done skipped)
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["all-to-all"] == 1
+    # ring wire-byte models
+    ag = 16 * 4096 * 512 * 2
+    assert st.wire_bytes["all-gather"] == pytest.approx(ag * 15 / 16)
+    ar = 1024 * 1024 * 4
+    start = 2 * 128 * 4
+    assert st.wire_bytes["all-reduce"] == pytest.approx(
+        2 * ar * 3 / 4 + 2 * start * 1 / 2)
+    rs = 64 * 128 * 2
+    assert st.wire_bytes["reduce-scatter"] == pytest.approx(rs * 1)  # g=2
+    assert st.wire_bytes["collective-permute"] == 4 * 512 * 2
+
+
+def test_analyze_terms_and_bottleneck():
+    c = get_config("granite-8b")
+    shape = SHAPES["train_4k"]
+    r = analyze(c, shape, mesh_name="single", n_devices=256,
+                flops_per_device=1e15, hbm_bytes_per_device=1e12,
+                wire_bytes_per_device=1e10)
+    assert r.compute_s == pytest.approx(1e15 / 197e12)
+    assert r.memory_s == pytest.approx(1e12 / 819e9)
+    assert r.collective_s == pytest.approx(1e10 / 50e9)
+    assert r.bottleneck == "compute"
+    assert 0 < r.roofline_fraction <= 1.0
+    # MODEL_FLOPS = 6 N D for training
+    assert r.model_flops == pytest.approx(
+        6.0 * c.active_param_count() * 256 * 4096)
+
+
+def test_model_flops_decode():
+    c = get_config("mamba2-1.3b")
+    r = model_flops(c, SHAPES["decode_32k"])
+    assert r == pytest.approx(2.0 * c.active_param_count() * 128)
+
+
+def test_largest_shapes():
+    out = largest_shapes(HLO, top=3)
+    assert out[0][2] == "bf16[16,4096,512]"
+    assert out[0][0] == 16 * 4096 * 512 * 2
