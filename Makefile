@@ -1,0 +1,21 @@
+# Repo entry points. `make test` is the tier-1 gate (ROADMAP.md).
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-all ci bench bench-serve
+
+test:
+	$(PY) -m pytest -x -q
+
+test-all:        ## includes @pytest.mark.slow integration tests
+	$(PY) -m pytest -x -q --runslow
+
+ci:
+	bash scripts/ci.sh
+
+bench:
+	PYTHONPATH=src:. $(PY) -m benchmarks.run
+
+bench-serve:
+	PYTHONPATH=src:. $(PY) -m benchmarks.serve_bench --smoke

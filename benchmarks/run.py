@@ -14,6 +14,7 @@ import sys
 BENCHES = [
     # (module, paper analog, forced device count)
     ("benchmarks.llm_throughput", "Fig. 2 (LLM tokens/s + energy)", 1),
+    ("benchmarks.serve_bench", "serving: continuous batching + Wh/token", 1),
     ("benchmarks.resnet50_bench", "Fig. 3/Table III (ResNet50)", 1),
     ("benchmarks.ipu_gpt", "Table II (pipeline-parallel GPT-117M)", 4),
     ("benchmarks.heatmap", "Fig. 4 (dp x batch heatmap)", 8),

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: collection must be clean, then the suite must pass.
+#
+# Run from the repo root:  bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# 1. Collection errors fail fast and loudly (a module-level ImportError
+#    in any test file must never be mistaken for a "skipped" test —
+#    that is how the hypothesis import broke the seed suite unnoticed).
+python -m pytest -q --collect-only >/dev/null
+
+# 2. The tier-1 command from ROADMAP.md.
+python -m pytest -x -q

@@ -1,15 +1,25 @@
-"""Figures of merit (the paper's metrics, Section IV).
+"""Figures of merit (the paper's metrics, Section IV) + serving energy.
 
   tokens/s  = global_batch * seq_len / iteration_time     (LLM)
   images/s  = global_batch / iteration_time               (ResNet50)
   tokens/Wh, images/Wh — energy-efficiency metrics
   MFU       = model_flops / (time * chips * peak)
+
+Serving extensions (MLPerf-Power style, arXiv:2410.12032): the serve
+engine records per-step windows (``StepRecord``) plus synchronous power
+samples; ``attribute_energy`` integrates the sampled power over each
+step window and splits it across the requests that received tokens in
+that window, yielding Wh/token and Wh/request per served request.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass
+from typing import Sequence
 
 from repro.roofline.analysis import PEAK_FLOPS_BF16
+
+J_PER_WH = 3600.0
 
 
 @dataclass
@@ -44,3 +54,122 @@ def images_per_s(global_batch: int, iter_time_s: float) -> float:
 def mfu(model_flops_per_step: float, iter_time_s: float, n_chips: int,
         peak: float = PEAK_FLOPS_BF16) -> float:
     return model_flops_per_step / (max(iter_time_s, 1e-12) * n_chips * peak)
+
+
+# ---------------------------------------------------------------------------
+# Serving energy attribution
+# ---------------------------------------------------------------------------
+
+
+def _power_at(ts: Sequence[float], ws: Sequence[float], t: float) -> float:
+    """Linear interpolation of sampled power at time t (clamped ends)."""
+    if t <= ts[0]:
+        return ws[0]
+    if t >= ts[-1]:
+        return ws[-1]
+    i = bisect.bisect_right(ts, t)
+    t0, t1 = ts[i - 1], ts[i]
+    w0, w1 = ws[i - 1], ws[i]
+    if t1 == t0:
+        return w1
+    return w0 + (w1 - w0) * (t - t0) / (t1 - t0)
+
+
+def window_energy_wh(ts: Sequence[float], ws: Sequence[float],
+                     t0: float, t1: float) -> float:
+    """Trapezoid-integrate sampled power (watts) over [t0, t1] -> Wh.
+
+    Exact for piecewise-linear P(t) whose breakpoints are sample times —
+    which is what the serve engine produces by sampling synchronously at
+    every step boundary (and what the triangle-wave test asserts).
+    """
+    if t1 <= t0 or len(ts) == 0:
+        return 0.0
+    if len(ts) == 1:
+        return ws[0] * (t1 - t0) / J_PER_WH
+    # integration nodes: window ends + interior sample times
+    lo = bisect.bisect_right(ts, t0)
+    hi = bisect.bisect_left(ts, t1)
+    nodes = [t0] + list(ts[lo:hi]) + [t1]
+    vals = [_power_at(ts, ws, t) for t in nodes]
+    joules = sum(0.5 * (vals[i] + vals[i - 1]) * (nodes[i] - nodes[i - 1])
+                 for i in range(1, len(nodes)))
+    return joules / J_PER_WH
+
+
+def attribute_energy(steps, ts: Sequence[float],
+                     ws: Sequence[float]) -> dict:
+    """Per-request energy (Wh) from step windows + power samples.
+
+    ``steps``: iterable of records with ``t0``, ``t1`` and ``rids`` (the
+    requests that received one token each in that window) — the serve
+    scheduler's ``StepRecord``. Each window's energy splits equally
+    across its rids (every rid gains exactly one token per window, both
+    for decode steps and for the single-request prefill window).
+
+    Energy outside any step window (queue idle, scheduler overhead) is
+    deliberately unattributed: it is reported by the engine as
+    ``overhead_wh`` so the per-request figures stay marginal costs.
+    """
+    out: dict = {}
+    for s in steps:
+        if not s.rids:
+            continue
+        share = window_energy_wh(ts, ws, s.t0, s.t1) / len(s.rids)
+        for rid in s.rids:
+            out[rid] = out.get(rid, 0.0) + share
+    return out
+
+
+@dataclass
+class ServeSummary:
+    """Aggregate serving figures of merit over one engine run."""
+
+    n_requests: int
+    n_tokens: int               # generated tokens (all requests)
+    wall_s: float               # first admission -> last finish
+    decode_s: float             # sum of decode step windows
+    prefill_s: float            # sum of prefill windows
+    total_energy_wh: float      # integrated over the whole run
+    attributed_wh: float        # sum of per-request attributions
+    mean_ttft_s: float
+    p95_ttft_s: float
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Useful generated tokens per second of wall time."""
+        return self.n_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def wh_per_token(self) -> float:
+        return (self.attributed_wh / self.n_tokens) if self.n_tokens else 0.0
+
+    @property
+    def wh_per_request(self) -> float:
+        return (self.attributed_wh / self.n_requests) if self.n_requests \
+            else 0.0
+
+    @property
+    def overhead_wh(self) -> float:
+        """Energy burned outside prefill/decode windows (idle, host)."""
+        return max(self.total_energy_wh - self.attributed_wh, 0.0)
+
+
+def serve_summary(results, steps, ts, ws) -> ServeSummary:
+    """Build the aggregate summary from per-request results + step log."""
+    results = list(results)
+    ttfts = sorted(r.ttft_s for r in results) or [0.0]
+    wall = (max(r.finish_s for r in results)
+            - min(r.admitted_s for r in results)) if results else 0.0
+    total = window_energy_wh(ts, ws, ts[0], ts[-1]) if len(ts) > 1 else 0.0
+    return ServeSummary(
+        n_requests=len(results),
+        n_tokens=sum(r.n_tokens for r in results),
+        wall_s=wall,
+        decode_s=sum(s.duration_s for s in steps if s.kind == "decode"),
+        prefill_s=sum(s.duration_s for s in steps if s.kind == "prefill"),
+        total_energy_wh=total,
+        attributed_wh=sum(r.energy_wh for r in results),
+        mean_ttft_s=sum(ttfts) / len(ttfts),
+        p95_ttft_s=ttfts[min(int(0.95 * len(ttfts)), len(ttfts) - 1)],
+    )

@@ -111,6 +111,8 @@ def _opt_shardings(c, plan, aps, param_sh, oc=None):
 
 def _analyze_compiled(compiled, n_dev: int):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     colls = parse_collectives(compiled.as_text(), n_dev)
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)), colls)

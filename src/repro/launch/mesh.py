@@ -10,6 +10,16 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there,
+    # and on older jax every axis is implicitly auto — same semantics.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: (16,16) ("data","model") = 256 chips.
     Multi-pod:   (2,16,16) ("pod","data","model") = 512 chips; the "pod"
@@ -18,16 +28,12 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes) -> jax.sharding.Mesh:
     """Arbitrary mesh helper (tests, pipeline-parallel experiments)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

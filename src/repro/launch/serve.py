@@ -1,10 +1,17 @@
-"""Serving CLI: batched prefill + decode driver.
+"""Serving CLI: fixed-batch generation or continuous-batching service.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --preset tiny \
-      --batch 4 --prompt-len 64 --gen 32
+Legacy fixed-batch run (one batched prefill + n decode steps):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --preset tiny --batch 4 --prompt-len 64 --gen 32
+
+Continuous-batching service under synthetic Poisson load, with
+energy-per-token accounting (see benchmarks/README.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+      --mode continuous --slots 4 --requests 32 --rate 200
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -13,25 +20,21 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import synthetic_tokens
 from repro.models import lm
-from repro.serve.engine import BatchedServer
+from repro.power.methods import RaplPower, TPUModelPower
+from repro.serve.engine import BatchedServer, ServeEngine
+from repro.serve.requests import Request
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gpt-117m")
-    ap.add_argument("--preset", choices=["full", "tiny"], default="tiny")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _power_methods():
+    rapl = RaplPower()
+    if rapl.available():
+        return [rapl], "rapl"
+    return [TPUModelPower(n_devices=1, utilization_fn=lambda: 1.0)], \
+        "tpu_model"
 
-    c = get_config(args.arch)
-    if args.preset == "tiny":
-        c = c.reduced()
-    params = lm.init(jax.random.key(args.seed), c)
+
+def _run_batch(args, c, params):
     server = BatchedServer(c, params, max_len=args.gen + 1)
-
     prompts = jnp.asarray(synthetic_tokens(
         args.batch, args.prompt_len, c.vocab, args.seed)[:, :args.prompt_len])
     extras = {}
@@ -48,6 +51,66 @@ def main(argv=None):
           f"decode={res.decode_s * 1e3:.1f} ms "
           f"({res.decode_tokens_per_s:,.0f} tok/s decode)")
     return res
+
+
+def _run_scheduled(args, c, params):
+    methods, source = _power_methods()
+    max_len = args.prompt_len + args.gen + 1
+    engine = ServeEngine(c, params, n_slots=args.slots, max_len=max_len,
+                         power_methods=methods)
+    rng = np.random.default_rng(args.seed)
+    prompts = synthetic_tokens(args.requests, args.prompt_len, c.vocab,
+                               args.seed)[:, :args.prompt_len]
+    gaps = rng.exponential(1.0 / args.rate, size=args.requests)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    budgets = rng.integers(max(args.gen // 4, 1), args.gen + 1,
+                           size=args.requests)
+    reqs = [Request(rid=i, prompt=prompts[i],
+                    max_new_tokens=int(budgets[i]),
+                    arrival_s=float(arrivals[i]))
+            for i in range(args.requests)]
+    out = engine.serve(reqs, policy=args.mode)
+    s = out.summary
+    print(f"[serve] arch={c.name} mode={args.mode} slots={args.slots} "
+          f"rate={args.rate:g}/s power={source}")
+    print(f"  {s.n_requests} requests, {s.n_tokens} tokens in "
+          f"{s.wall_s:.2f} s -> {s.decode_tok_s:,.0f} tok/s")
+    print(f"  ttft mean {s.mean_ttft_s * 1e3:.1f} ms / p95 "
+          f"{s.p95_ttft_s * 1e3:.1f} ms")
+    print(f"  energy {s.attributed_wh:.4f} Wh attributed "
+          f"(+{s.overhead_wh:.4f} Wh overhead) -> "
+          f"{s.wh_per_token * 1e3:.4f} mWh/token, "
+          f"{s.wh_per_request * 1e3:.4f} mWh/request")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt-117m")
+    ap.add_argument("--preset", choices=["full", "tiny"], default="tiny")
+    ap.add_argument("--mode", choices=["batch", "continuous", "fixed"],
+                    default="batch",
+                    help="batch = legacy one-shot generate; continuous/"
+                         "fixed = scheduled serving under Poisson load")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.rate <= 0:
+        ap.error("--rate must be > 0 (Poisson arrival rate in req/s)")
+
+    c = get_config(args.arch)
+    if args.preset == "tiny":
+        c = c.reduced()
+    params = lm.init(jax.random.key(args.seed), c)
+    if args.mode == "batch":
+        return _run_batch(args, c, params)
+    return _run_scheduled(args, c, params)
 
 
 if __name__ == "__main__":

@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import apply_rope, dense_init, dtype_of, param_dtype_of
+from repro.models.common import (
+    apply_rope, dense_init, dtype_of, opt_barrier, param_dtype_of,
+)
 
 Params = Any
 NEG_INF = float(jnp.finfo(jnp.float32).min)
@@ -111,7 +113,7 @@ def qkv_proj(c: ModelConfig, p: Params, x: jax.Array,
     if c.use_rope and positions is not None:
         # barrier: keep the f32 rope math from retroactively upcasting the
         # projection matmuls (and thus the stacked weights) to f32
-        q, k = jax.lax.optimization_barrier((q, k))
+        q, k = opt_barrier((q, k))
         q = apply_rope(q, positions, c.rope_theta)
         k = apply_rope(k, positions, c.rope_theta)
     return _hint(q, "q_spec"), _hint(k, "kv_spec"), _hint(v, "kv_spec")
@@ -148,7 +150,7 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
             rep = h // kh
             k = jnp.repeat(k, rep, axis=2)
             v = jnp.repeat(v, rep, axis=2)
-        scores = jax.lax.optimization_barrier(
+        scores = opt_barrier(
             jnp.einsum("bshk,bthk->bhst", q, k)).astype(jnp.float32)
         if mask is not None:
             scores = scores + _mask_bias(mask, scores.dtype)
@@ -157,7 +159,7 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
     else:
         g = h // kh
         qg = q.reshape(b, s, kh, g, dh)
-        scores = jax.lax.optimization_barrier(
+        scores = opt_barrier(
             jnp.einsum("bskgd,btkd->bkgst", qg, k)).astype(jnp.float32)
         if mask is not None:
             scores = scores + _mask_bias(mask, scores.dtype)[:, None]
@@ -308,31 +310,54 @@ def decode_attention(c: ModelConfig, p: Params, x: jax.Array,
                      pos: jax.Array, *, impl: str = "grouped"):
     """One-token decode against a fixed-size KV cache.
 
-    x: (B, 1, D); cache_k/v: (B, T, Kh, Dh); pos: scalar int32 (step index).
+    x: (B, 1, D); cache_k/v: (B, T, Kh, Dh); pos: scalar int32 (step
+    index, shared by all rows) OR an int32 vector (B,) of per-row
+    positions — the continuous-batching serve engine tracks an
+    independent write position per slot.
     Returns (out (B,1,D), new_cache_k, new_cache_v).
 
-    For windowed attention the cache is sliced to the last ``window``
-    entries (O(window) per step); otherwise the new token attends to all
-    cached positions < pos (O(T) per step — linear, not quadratic).
+    Scalar pos + windowed attention slices the cache to the last
+    ``window`` entries (O(window) per step); otherwise the new token
+    attends to all cached positions <= pos under a (per-row) mask
+    (O(T) per step — linear, not quadratic).
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = qkv_proj(c, p, x, positions if c.use_rope else None)
 
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=1)
+    if per_slot:
+        # independent write position per batch row (slot): row scatter
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, pos].set(k_new[:, 0])
+        cache_v = cache_v.at[rows, pos].set(v_new[:, 0])
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos,
+                                                      axis=1)
 
     cache_k = _hint(cache_k, "cache_spec")
     cache_v = _hint(cache_v, "cache_spec")
-    if c.attn_window is not None and c.attn_window < cache_k.shape[1]:
+    t = cache_k.shape[1]
+    if (not per_slot and c.attn_window is not None and c.attn_window < t):
         w = c.attn_window
-        start = jnp.clip(pos - w + 1, 0, cache_k.shape[1] - w)
+        start = jnp.clip(pos - w + 1, 0, t - w)
         k_att = jax.lax.dynamic_slice_in_dim(cache_k, start, w, axis=1)
         v_att = jax.lax.dynamic_slice_in_dim(cache_v, start, w, axis=1)
         kpos = start + jnp.arange(w)
+        mask = (kpos <= pos)[None, None, None, :]  # (1,1,1,W)
     else:
         k_att, v_att = cache_k, cache_v
-        kpos = jnp.arange(cache_k.shape[1])
-    mask = (kpos <= pos)[None, None, None, :]  # (1,1,1,T)
+        kpos = jnp.arange(t)
+        if per_slot:
+            m = kpos[None, :] <= positions  # (B, T)
+            if c.attn_window is not None and c.attn_window < t:
+                # per-row starts preclude a shared slice; mask instead
+                m = m & (kpos[None, :] > positions - c.attn_window)
+            mask = m[:, None, None, :]  # (B,1,1,T)
+        else:
+            mask = (kpos <= pos)[None, None, None, :]  # (1,1,1,T)
     out = out_proj(p, sdpa(q, k_att, v_att, mask, impl=impl))
     return out, cache_k, cache_v

@@ -19,6 +19,26 @@ from repro.configs.base import ModelConfig
 Params = Any  # nested dict of arrays
 
 
+@jax.custom_jvp
+def opt_barrier(x):
+    """``optimization_barrier`` that differentiates as identity.
+
+    jax.lax.optimization_barrier has no differentiation rule (through at
+    least jax 0.4.x), so any barrier on the training forward path kills
+    grad. The barrier only constrains XLA scheduling — mathematically it
+    IS identity — so the tangent passes straight through unbarriered
+    (a barriered tangent would need a transpose rule the primitive also
+    lacks).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return opt_barrier(x), t
+
+
 def dtype_of(c: ModelConfig):
     return jnp.dtype(c.dtype)
 
@@ -60,7 +80,7 @@ def apply_norm(c: ModelConfig, p: Params, x: jax.Array, eps: float = 1e-5) -> ja
     # barrier: stops XLA pulling this f32 cast back through the preceding
     # matmuls (it would convert whole stacked bf16 weights/caches to f32 and
     # hoist them out of the layer loop — measured 2x memory on 35B decode)
-    x = jax.lax.optimization_barrier(x)
+    x = opt_barrier(x)
     xf = x.astype(jnp.float32)
     if c.norm == "layernorm":
         mu = jnp.mean(xf, axis=-1, keepdims=True)

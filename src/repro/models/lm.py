@@ -151,8 +151,11 @@ def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
 def decode_step(c: ModelConfig, p: Params, token: jax.Array, caches: Params,
                 pos: jax.Array, *, enc_kv: Params = None,
                 impl: str = "grouped", unroll: bool = False):
-    """token: (B, 1) int32; pos: scalar int32. Returns (logits, caches)."""
-    positions = jnp.full_like(token, pos)
+    """token: (B, 1) int32; pos: scalar int32 OR per-row (B,) int32 (the
+    continuous-batching engine decodes slots at independent positions).
+    Returns (logits, caches)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full_like(token, pos)
     x = embed_tokens(c, p["embed"], token, positions)
     x, caches = blocks.stack_decode(c, p["layers"], x, caches, pos,
                                     impl=impl, enc_kv_stacked=enc_kv,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import dense_init, dtype_of, param_dtype_of
+from repro.models.common import dense_init, dtype_of, opt_barrier, param_dtype_of
 
 Params = Any
 
@@ -63,7 +63,7 @@ def _split_proj(c: ModelConfig, zxbcdt: jax.Array):
 
 def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
                 eps: float = 1e-5) -> jax.Array:
-    y, z = jax.lax.optimization_barrier((y, z))  # see common.apply_norm
+    y, z = opt_barrier((y, z))  # see common.apply_norm
     g = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)).astype(jnp.float32)
     ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
     return (g * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)

@@ -1,0 +1,26 @@
+"""jax API compatibility shims for the parallel layer.
+
+The repo targets the modern jax surface (``jax.shard_map`` with
+``check_vma``), but must also run on jax 0.4.x where shard_map lives in
+``jax.experimental.shard_map`` and the replication-check kwarg is named
+``check_rep``. Route every shard_map call through here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` on new jax, experimental fallback on 0.4.x.
+
+    ``check_vma`` maps onto the older ``check_rep`` flag (both disable the
+    same replication/varying-manual-axes validation).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -1,6 +1,24 @@
-"""KV / SSM cache construction (abstract + concrete)."""
+"""KV / SSM cache construction (abstract + concrete) + slot operations.
+
+Two layers:
+
+  * ``abstract_caches`` — ShapeDtypeStructs via eval_shape (dry-run path);
+  * slotted-cache ops — the continuous-batching engine's KV store. The
+    cache batch axis is a pool of ``n_slots`` rows of capacity
+    ``max_len``; finished requests free their row via ``insert_slot``
+    (overwrite on refill) or ``reset_slot`` without retracing: the slot
+    index is a *traced* argument, so one jitted program serves every
+    slot, and donation makes the update in-place.
+
+Cache tree layout (from ``blocks.stack_prefill`` under scan):
+  attention slots:  {"k","v"}      leaves (L, B, T, Kh, Dh)
+  mamba slots:      {"ssm","conv"} leaves (L, B, ...) — T-independent
+The batch axis is axis 1 for every leaf, which is what the slot ops rely
+on; only "k"/"v" leaves carry the T axis (axis 2) and need growing.
+"""
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -30,3 +48,83 @@ def abstract_caches(c: ModelConfig, batch: int, seq_len: int,
         return caches, enc_kv
 
     return jax.eval_shape(run, abstract_params, tokens, kw), kw
+
+
+# ---------------------------------------------------------------------------
+# Slotted cache (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def _is_kv(path) -> bool:
+    return getattr(path[-1], "key", None) in ("k", "v")
+
+
+def grow_caches(caches: Params, max_len: int) -> Params:
+    """Pad every k/v leaf's T axis (axis 2) up to ``max_len`` rows.
+
+    SSM/conv state leaves are fixed-size and pass through untouched.
+    Used both by the fixed-batch policy (grow prompt caches for decode)
+    and by slot insertion (grow a batch-1 prefill row to slot capacity).
+    """
+
+    def grow(path, leaf):
+        if _is_kv(path):
+            pad = max_len - leaf.shape[2]
+            assert pad >= 0, (leaf.shape, max_len)
+            widths = [(0, 0)] * leaf.ndim
+            widths[2] = (0, pad)
+            return jnp.pad(leaf, widths)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+def slotted_cache(c: ModelConfig, n_slots: int, max_len: int,
+                  params: Params) -> Params:
+    """Zero-initialized cache pool: n_slots rows of max_len capacity.
+
+    Shapes come from ``eval_shape`` on prefill (no tracing of the real
+    model weights); the concrete zeros are allocated once and then only
+    ever updated in place (donation) by decode/insert/reset.
+    """
+    abstract = lm.init_abstract(c) if params is None else params
+    (caches, _enc_kv), _ = abstract_caches(c, n_slots, max_len, abstract)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), caches)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert_slot(caches: Params, row: Params, slot: jax.Array) -> Params:
+    """Write a batch-1 cache tree into batch row ``slot`` of the pool.
+
+    ``slot`` is traced — one compiled program covers every slot index, so
+    admitting a request into any slot never retraces. The old row content
+    (a finished request's KV) is simply overwritten: freeing is O(0).
+    """
+
+    def put(big, small):
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=1)
+
+    return jax.tree.map(put, caches, row)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def reset_slot(caches: Params, slot: jax.Array) -> Params:
+    """Zero batch row ``slot`` (defensive scrub; insert_slot overwrites
+    anyway, but an explicit reset keeps cancelled requests from leaking
+    stale KV into debugging dumps)."""
+
+    def zero(leaf):
+        row = jnp.zeros((leaf.shape[0], 1) + leaf.shape[2:], leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, row, slot, axis=1)
+
+    return jax.tree.map(zero, caches)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def compact_slots(caches: Params, perm: jax.Array) -> Params:
+    """Gather batch rows by ``perm`` (n_slots,) — packs active slots to
+    the front. Not needed by the fixed-pool engine (slots are
+    position-independent) but the building block for shrinking the live
+    batch under paged/variable-slot serving."""
+    return jax.tree.map(lambda leaf: jnp.take(leaf, perm, axis=1), caches)

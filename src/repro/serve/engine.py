@@ -1,22 +1,47 @@
-"""Serving engine: batched prefill + decode with donated caches.
+"""Serving engine: continuous batching + fixed-batch policies, with
+energy-per-token accounting.
+
+``ServeEngine`` owns the jitted prefill/decode programs and the slotted
+KV cache (``serve.cache``); on top of that single engine sit two
+admission policies (``serve.scheduler``):
+
+  * ``continuous`` — Orca/vLLM-style iteration-level scheduling: slots
+    refill from the queue between decode steps, requests early-exit on
+    EOS and free their cache row immediately;
+  * ``fixed``      — classic fixed-batch serving (admit a full batch,
+    drain it, admit the next) — the baseline the serve benchmark
+    measures continuous batching against.
+
+Energy: the engine reads its ``PowerMethod`` list synchronously at every
+step boundary, so each prefill/decode window is bracketed by samples and
+``repro.core.metrics.attribute_energy`` integrates exactly over it —
+yielding Wh/token and Wh/request per served request (the MLPerf-Power
+figure of merit).
 
 ``serve_step`` (single-token decode against a full KV cache) is what the
-``decode_*`` / ``long_*`` dry-run shapes lower. The BatchedServer is the
-runnable driver used by the serving example/benchmark: fixed-batch
-continuous decoding with greedy or temperature sampling.
+``decode_*`` / ``long_*`` dry-run shapes lower. ``BatchedServer`` remains
+as the thin fixed-batch wrapper the examples/tests drive.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.metrics import (
+    ServeSummary, attribute_energy, serve_summary,
+)
+from repro.core.runner import StragglerWatchdog
 from repro.models import lm
+from repro.serve.cache import grow_caches, insert_slot, slotted_cache
+from repro.serve.requests import Request, RequestResult
+from repro.serve.scheduler import Scheduler, StepRecord
 
 Params = Any
 
@@ -51,27 +76,229 @@ class GenerationResult:
         return n / max(self.decode_s, 1e-9)
 
 
-class BatchedServer:
-    """Fixed-batch greedy decoding driver (benchmark/serving example)."""
+@dataclass
+class ServeRunResult:
+    """Outcome of one ``ServeEngine.serve`` run."""
 
-    def __init__(self, c: ModelConfig, params: Params, *,
-                 max_len: int = 256, impl_prefill: str = "repeat",
-                 impl_decode: str = "grouped", donate: bool = True):
-        self.c, self.params, self.max_len = c, params, max_len
-        self._prefill = jax.jit(make_prefill_fn(c, impl_prefill))
-        decode = make_decode_fn(c, impl_decode)
-        self._decode = jax.jit(decode, donate_argnums=(2,) if donate else ())
+    results: list                 # RequestResult, completion order
+    steps: list                   # StepRecord log (energy attribution)
+    sample_ts: list               # synchronous power sample times
+    sample_ws: list               # total watts at each sample
+    summary: ServeSummary
+    straggler_events: list = field(default_factory=list)
+
+    def by_rid(self) -> dict:
+        return {r.rid: r for r in self.results}
+
+
+class ServeEngine:
+    """Shared serving engine: jitted prefill/decode + slotted KV cache.
+
+    Model mode (the default): pass ``(c, params)`` — the engine jits
+    prefill/decode once and allocates an ``(n_slots, max_len)`` cache
+    pool on first use. ``max_len`` is the TOTAL per-slot capacity
+    (prompt + generated tokens).
+
+    Scripted mode (unit tests): pass ``prefill_fn``/``decode_fn`` —
+    host-side callables with no device work:
+
+      prefill_fn(slot: int, prompt: np.ndarray) -> int   first token
+      decode_fn(tokens (S,), positions (S,), active (S,) bool) -> (S,)
+
+    plus an optional fake ``clock``/``sleep_fn`` pair, which makes the
+    energy accounting exactly computable in tests.
+    """
+
+    def __init__(self, c: Optional[ModelConfig] = None,
+                 params: Params = None, *,
+                 n_slots: int = 4, max_len: int = 256,
+                 impl_prefill: str = "repeat", impl_decode: str = "grouped",
+                 donate: bool = True,
+                 prefill_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep_fn: Optional[Callable[[float], None]] = None,
+                 power_methods: Sequence = (),
+                 watchdog: Optional[StragglerWatchdog] = None):
+        self.c, self.params = c, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.clock = clock
+        self.sleep_fn = sleep_fn or time.sleep
+        self.power_methods = list(power_methods)
+        self.watchdog = watchdog
+        self._scripted = prefill_fn is not None
+        if self._scripted:
+            self._slot_prefill = prefill_fn
+            self._slot_decode = decode_fn
+        else:
+            assert c is not None and params is not None
+            self._prefill = jax.jit(make_prefill_fn(c, impl_prefill))
+            decode = make_decode_fn(c, impl_decode)
+            self._decode = jax.jit(decode,
+                                   donate_argnums=(2,) if donate else ())
+            self._grow = jax.jit(grow_caches, static_argnums=(1,))
+            self.caches: Params = None   # allocated on first serve()
+
+    # ------------------------------------------------------------------
+    # Model-backed slot operations (continuous policy)
+    # ------------------------------------------------------------------
+
+    def _ensure_slotted(self):
+        if self.caches is None:
+            assert self.c.family not in ("encdec", "vlm"), (
+                "continuous batching currently covers decoder-only "
+                "families (dense/moe/ssm/hybrid); encdec/vlm need "
+                "per-request side inputs — use the fixed-batch policy")
+            self.caches = slotted_cache(self.c, self.n_slots, self.max_len,
+                                        self.params)
+
+    def _model_slot_prefill(self, slot: int, prompt: np.ndarray) -> int:
+        """Prefill one request (batch=1) and insert its KV row at slot.
+
+        Distinct prompt lengths compile distinct prefill programs (pad
+        prompts to shared buckets upstream to avoid that); slot index and
+        cache contents are traced, so refill itself never retraces.
+        """
+        tokens = jnp.asarray(np.asarray(prompt, np.int32))[None, :]
+        logits, row, _enc_kv = self._prefill(self.params, tokens, {})
+        row = self._grow(row, self.max_len)
+        self.caches = insert_slot(self.caches, row, jnp.int32(slot))
+        return int(jnp.argmax(logits[0, -1], -1))
+
+    def _model_slot_decode(self, tokens: np.ndarray, positions: np.ndarray,
+                           active: np.ndarray) -> np.ndarray:
+        """One decode step over the whole slot pool (inactive rows ride
+        along at a dead position; fixed shapes keep it a single trace)."""
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        logits, self.caches = self._decode(
+            self.params, tok, self.caches,
+            jnp.asarray(positions, jnp.int32), None)
+        return np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+
+    # ------------------------------------------------------------------
+    # Continuous-batching run loop
+    # ------------------------------------------------------------------
+
+    def _sample_power(self, ts: list, ws: list):
+        if not self.power_methods:
+            return
+        w = 0.0
+        for m in self.power_methods:
+            try:
+                w += sum(m.read().values())
+            except Exception:
+                pass  # a failing backend must not kill serving
+        ts.append(self.clock())
+        ws.append(w)
+
+    def serve(self, requests: Sequence[Request], *,
+              policy: str = "continuous",
+              poll_s: float = 0.002) -> ServeRunResult:
+        """Run a request set to completion under the given policy.
+
+        Request ``arrival_s`` values are relative to run start; the
+        engine sleeps (``sleep_fn``) while the queue is empty and slots
+        are idle, so wall time includes genuine arrival gaps.
+        """
+        if not self._scripted:
+            self._ensure_slotted()
+        sched = Scheduler(self.n_slots, self.max_len, policy=policy)
+        slot_prefill = (self._slot_prefill if self._scripted
+                        else self._model_slot_prefill)
+        slot_decode = (self._slot_decode if self._scripted
+                       else self._model_slot_decode)
+        watchdog = self.watchdog
+
+        t_start = self.clock()
+        results: dict[int, RequestResult] = {}
+        for r in requests:
+            sched.submit(r)
+            results[r.rid] = RequestResult(
+                rid=r.rid, prompt_len=r.prompt_len,
+                arrival_s=t_start + r.arrival_s)
+        steps: list[StepRecord] = []
+        ts: list[float] = []
+        ws: list[float] = []
+        self._sample_power(ts, ws)
+        decode_idx = 0
+
+        while sched.has_work:
+            now_rel = self.clock() - t_start
+            # -- admission: prefill newly admitted requests ---------------
+            for slot in sched.refill(now_rel):
+                req = slot.request
+                res = results[req.rid]
+                res.slot = slot.index
+                res.admitted_s = self.clock()
+                self._sample_power(ts, ws)   # bracket the prefill window
+                first = slot_prefill(slot.index, req.prompt)
+                t1 = self.clock()
+                self._sample_power(ts, ws)
+                res.first_token_s = t1
+                res.tokens.append(int(first))
+                steps.append(StepRecord("prefill", res.admitted_s, t1,
+                                        (req.rid,), 1))
+                reason = sched.record_token(slot, int(first))
+                if reason is not None:
+                    res.finish_s, res.finish_reason = t1, reason
+            # -- one decode step over all active slots --------------------
+            active = sched.active_slots()
+            if active:
+                rids = tuple(s.request.rid for s in active)
+                t0 = self.clock()
+                self._sample_power(ts, ws)   # bracket the decode window
+                out = slot_decode(sched.input_tokens(), sched.positions(),
+                                  sched.active_mask())
+                t1 = self.clock()
+                self._sample_power(ts, ws)
+                if watchdog is not None:
+                    watchdog.observe(decode_idx, t1 - t0)
+                decode_idx += 1
+                steps.append(StepRecord("decode", t0, t1, rids, len(rids)))
+                for s in active:
+                    res = results[s.request.rid]
+                    tok = int(out[s.index])
+                    res.tokens.append(tok)
+                    reason = sched.record_token(s, tok)
+                    if reason is not None:
+                        res.finish_s, res.finish_reason = t1, reason
+            elif sched.n_pending:
+                # idle: nothing admitted yet — wait for the next arrival
+                nxt = sched.next_arrival_s()
+                wait = (t_start + nxt) - self.clock() if nxt is not None \
+                    else poll_s
+                if wait > 0:
+                    self.sleep_fn(min(wait, 0.05))
+
+        self._sample_power(ts, ws)
+        out_results = sorted(results.values(), key=lambda r: r.finish_s)
+        for rid, wh in attribute_energy(steps, ts, ws).items():
+            results[rid].energy_wh = wh
+        return ServeRunResult(
+            results=out_results, steps=steps, sample_ts=ts, sample_ws=ws,
+            summary=serve_summary(out_results, steps, ts, ws),
+            straggler_events=list(watchdog.events) if watchdog else [])
+
+    # ------------------------------------------------------------------
+    # Fixed-batch generation (legacy BatchedServer path)
+    # ------------------------------------------------------------------
 
     def generate(self, tokens: jax.Array, n_steps: int,
-                 extras: Optional[dict] = None) -> GenerationResult:
+                 extras: Optional[dict] = None,
+                 gen_budget: Optional[int] = None) -> GenerationResult:
+        """Fixed-batch greedy decode: prefill a full batch, decode
+        ``n_steps`` with a shared scalar position. ``gen_budget`` sets
+        the KV growth beyond the prompt (defaults to n_steps + 1)."""
+        assert not self._scripted
         extras = extras or {}
+        budget = gen_budget if gen_budget is not None else n_steps + 1
         b, s = tokens.shape
         t0 = time.perf_counter()
         logits, caches, enc_kv = self._prefill(self.params, tokens, extras)
         logits.block_until_ready()
         t1 = time.perf_counter()
-        # grow KV caches to max_len so decode can append
-        caches = jax.tree_util.tree_map_with_path(self._grow, caches)
+        # grow KV caches so decode can append (SSM states pass through)
+        caches = self._grow(caches, s + budget)
         out = [jnp.argmax(logits[:, -1], -1).astype(jnp.int32)]
         pos = s
         for _ in range(n_steps - 1):
@@ -84,12 +311,25 @@ class BatchedServer:
         t2 = time.perf_counter()
         return GenerationResult(jnp.stack(out, 1), n_steps, t1 - t0, t2 - t1)
 
-    def _grow(self, path, leaf: jax.Array) -> jax.Array:
-        # KV caches have layout (L, B, T, ...); pad T up to prompt+max_len.
-        # SSM/conv states are fixed-size and pass through untouched.
-        name = getattr(path[-1], "key", None)
-        if name in ("k", "v"):
-            widths = [(0, 0)] * leaf.ndim
-            widths[2] = (0, self.max_len)
-            return jnp.pad(leaf, widths)
-        return leaf
+
+class BatchedServer:
+    """Fixed-batch greedy decoding driver — one policy over ServeEngine.
+
+    Back-compat shim: ``max_len`` keeps its historical meaning here (KV
+    growth budget beyond the prompt), while ``ServeEngine.max_len`` is
+    the total slot capacity.
+    """
+
+    def __init__(self, c: ModelConfig, params: Params, *,
+                 max_len: int = 256, impl_prefill: str = "repeat",
+                 impl_decode: str = "grouped", donate: bool = True):
+        self.c, self.params, self.max_len = c, params, max_len
+        self.engine = ServeEngine(
+            c, params, n_slots=1, max_len=max_len,
+            impl_prefill=impl_prefill, impl_decode=impl_decode,
+            donate=donate)
+
+    def generate(self, tokens: jax.Array, n_steps: int,
+                 extras: Optional[dict] = None) -> GenerationResult:
+        return self.engine.generate(tokens, n_steps, extras,
+                                    gen_budget=self.max_len)

@@ -1,0 +1,89 @@
+"""Serving request/result records with per-request latency accounting.
+
+The MLPerf-Power observation (PAPERS.md, arXiv:2410.12032) is that the
+metric that matters at scale is energy per *served inference* under a
+realistic arrival process — not fixed-batch peak throughput. These records
+carry everything needed to compute it: arrival/admission/first-token/
+finish timestamps per request, and the energy attributed to the request
+by :func:`repro.core.metrics.attribute_energy`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+J_PER_WH = 3600.0
+
+
+@dataclass
+class Request:
+    """One generation request entering the serve queue.
+
+    ``arrival_s`` is relative to the engine run start (the engine offsets
+    it by its clock at run begin); requests with ``arrival_s`` in the
+    future stay queued until the (possibly fake) clock reaches them —
+    this is how the benchmark injects Poisson arrivals.
+    """
+
+    rid: int
+    prompt: np.ndarray                  # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    eos_id: Optional[int] = None        # None -> run to max_new_tokens
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[-1])
+
+
+@dataclass
+class RequestResult:
+    """Per-request serving outcome: tokens + latency + energy."""
+
+    rid: int
+    prompt_len: int
+    tokens: list = field(default_factory=list)   # generated token ids
+    arrival_s: float = 0.0
+    admitted_s: float = 0.0             # slot admission (prefill start)
+    first_token_s: float = 0.0          # end of prefill = first token
+    finish_s: float = 0.0
+    finish_reason: str = ""             # "eos" | "length"
+    slot: int = -1
+    energy_wh: float = 0.0              # attributed by core.metrics
+
+    # -- latency figures of merit ---------------------------------------
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, from arrival (includes queueing delay)."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Steady-state decode rate (excludes queueing and prefill)."""
+        gen_window = self.finish_s - self.first_token_s
+        if self.n_tokens <= 1 or gen_window <= 0:
+            return 0.0
+        return (self.n_tokens - 1) / gen_window
+
+    # -- energy figures of merit ----------------------------------------
+    @property
+    def wh_per_token(self) -> float:
+        return self.energy_wh / self.n_tokens if self.n_tokens else 0.0
+
+    @property
+    def tokens_per_wh(self) -> float:
+        return self.n_tokens / self.energy_wh if self.energy_wh > 0 else 0.0

@@ -1,0 +1,195 @@
+"""Continuous-batching scheduler: queue, slot admission, refill, early exit.
+
+Pure host-side bookkeeping — no jax. The engine owns the device work; the
+scheduler owns WHICH request sits in WHICH batch slot at every decode
+step. The model of operation (Orca/vLLM-style iteration-level scheduling,
+reduced to fixed slots):
+
+  * a fixed pool of ``n_slots`` batch slots, each backed by one KV-cache
+    row of capacity ``max_len`` tokens (prompt + generated);
+  * arriving requests queue FIFO; ``refill(now)`` admits arrived requests
+    into free slots *between* decode steps (admission = one prefill);
+  * every decode step advances all active slots by one token;
+  * a slot frees as soon as its request hits EOS or its token budget
+    ("early exit"), and is refilled from the queue before the next step —
+    finished requests never occupy batch rows.
+
+Two policies share this class:
+
+  ``continuous`` — refill whenever a slot is free (the tentpole);
+  ``fixed``      — admit only when ALL slots are idle, i.e. classic
+                   fixed-batch serving with a batch-fill barrier; used as
+                   the benchmark baseline.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.requests import Request
+
+
+@dataclass
+class Slot:
+    """One batch row: its request and per-slot position/length state."""
+
+    index: int
+    request: Optional[Request] = None
+    pos: int = 0          # next KV write position == tokens in the row
+    generated: int = 0
+    last_token: int = 0   # input token for the next decode step
+
+    @property
+    def active(self) -> bool:
+        return self.request is not None
+
+
+@dataclass
+class StepRecord:
+    """One engine step (prefill or decode) for energy attribution.
+
+    ``rids`` are the requests credited with tokens in this window; decode
+    steps credit one token to every active slot, prefill steps credit the
+    single admitted request with its first token.
+    """
+
+    kind: str             # "prefill" | "decode"
+    t0: float
+    t1: float
+    rids: tuple
+    n_tokens: int
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1 - self.t0
+
+
+class Scheduler:
+    """Slot admission / refill / early-exit state machine."""
+
+    def __init__(self, n_slots: int, max_len: int, *,
+                 policy: str = "continuous"):
+        assert policy in ("continuous", "fixed"), policy
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.policy = policy
+        self.slots = [Slot(i) for i in range(n_slots)]
+        self.queue: deque[Request] = deque()
+        self._arrivals: list[Request] = []   # not yet arrived (future)
+
+    # -- submission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Register a request; it becomes admissible once now >= arrival."""
+        cap = req.prompt_len + req.max_new_tokens
+        assert cap <= self.max_len, (
+            f"request {req.rid} needs {cap} cache rows > max_len "
+            f"{self.max_len}")
+        self._arrivals.append(req)
+        self._arrivals.sort(key=lambda r: r.arrival_s)
+
+    def _absorb_arrivals(self, now: float) -> None:
+        while self._arrivals and self._arrivals[0].arrival_s <= now:
+            self.queue.append(self._arrivals.pop(0))
+
+    def next_arrival_s(self) -> Optional[float]:
+        return self._arrivals[0].arrival_s if self._arrivals else None
+
+    # -- admission -------------------------------------------------------
+    def refill(self, now: float) -> list[Slot]:
+        """Admit arrived+queued requests into free slots (FIFO).
+
+        Returns the newly-filled slots; the engine prefills each. Under
+        the ``fixed`` policy admission waits for the batch to fully drain
+        (the classic fixed-batch barrier the benchmark measures against).
+        """
+        self._absorb_arrivals(now)
+        if self.policy == "fixed":
+            if any(s.active for s in self.slots):
+                return []
+            # batch-fill barrier: when more requests are still arriving,
+            # wait until a FULL batch is queued (the strongest fixed-batch
+            # baseline — admitting partial batches would only flatter the
+            # continuous policy in the benchmark comparison)
+            if self._arrivals and len(self.queue) < self.n_slots:
+                return []
+        admitted = []
+        for slot in self.slots:
+            if not self.queue:
+                break
+            if slot.active:
+                continue
+            req = self.queue.popleft()
+            slot.request = req
+            slot.pos = req.prompt_len     # prefill fills rows [0, len)
+            slot.generated = 0
+            slot.last_token = 0
+            admitted.append(slot)
+        return admitted
+
+    # -- step bookkeeping ------------------------------------------------
+    def active_slots(self) -> list[Slot]:
+        return [s for s in self.slots if s.active]
+
+    def record_token(self, slot: Slot, token: int) -> Optional[str]:
+        """Account one generated token for ``slot``.
+
+        Returns a finish reason ("eos" | "length") and frees the slot if
+        the request completed, else None. EOS counts as a generated
+        token (it is the model's output) but stops the request early.
+
+        Position invariant: token ``g`` (1-indexed, g=1 from prefill) is
+        the *input* of decode step ``g`` and gets written to cache row
+        ``prompt_len + g - 1``; so after recording token g the slot's
+        next write position is ``prompt_len + g - 1``.
+        """
+        req = slot.request
+        assert req is not None
+        slot.generated += 1
+        slot.last_token = int(token)
+        slot.pos = req.prompt_len + slot.generated - 1
+        if req.eos_id is not None and int(token) == req.eos_id:
+            self._free(slot)
+            return "eos"
+        if slot.generated >= req.max_new_tokens:
+            self._free(slot)
+            return "length"
+        if slot.pos >= self.max_len:   # cache row exhausted (defensive)
+            self._free(slot)
+            return "length"
+        return None
+
+    def _free(self, slot: Slot) -> None:
+        slot.request = None
+        slot.generated = 0
+
+    # -- batched views for the decode step -------------------------------
+    def input_tokens(self) -> np.ndarray:
+        """(n_slots,) int32 — each slot's next input token (0 if idle)."""
+        return np.asarray([s.last_token if s.active else 0
+                           for s in self.slots], np.int32)
+
+    def positions(self) -> np.ndarray:
+        """(n_slots,) int32 — per-slot KV write position.
+
+        Idle slots report ``max_len - 1``: a valid in-bounds row whose
+        write is harmless (the row is dead until the next prefill
+        overwrites it) — keeps the jitted decode free of masking.
+        """
+        return np.asarray([s.pos if s.active else self.max_len - 1
+                           for s in self.slots], np.int32)
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([s.active for s in self.slots], bool)
+
+    # -- run state -------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return (bool(self.queue) or bool(self._arrivals)
+                or any(s.active for s in self.slots))
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.queue) + len(self._arrivals)

@@ -1,0 +1,98 @@
+"""Property-test shim: real ``hypothesis`` when installed, otherwise a
+tiny deterministic fallback.
+
+The tier-1 suite must collect and pass on a bare interpreter (the CI
+container does not ship hypothesis).  When the real package is available
+we re-export it unchanged and get full shrinking/fuzzing; when it is not,
+``given`` degrades to a seeded parametrized sweep: each strategy draws a
+fixed number of deterministic examples from ``random.Random`` so the
+property still runs against a spread of inputs (just without search).
+
+Usage in test modules::
+
+    from _prop import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5  # examples per property when hypothesis is absent
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Namespace:
+        """The subset of ``hypothesis.strategies`` the suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            elems = list(seq)
+            return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+        @staticmethod
+        def characters(codec="ascii", exclude_categories=(), **_kw):
+            # printable ASCII, no control/surrogate categories by
+            # construction — sufficient for the byte-fallback tokenizer test
+            pool = [chr(i) for i in range(32, 127)]
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def text(alphabet=None, min_size=0, max_size=20):
+            alpha = alphabet or _Namespace.characters()
+
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return "".join(alpha.draw(rng) for _ in range(n))
+
+            return _Strategy(draw)
+
+    st = _Namespace()
+
+    def settings(*, max_examples=_FALLBACK_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # introspect the inner signature and demand fixtures for the
+            # drawn parameters.  The runner must present a bare signature.
+            def runner(*outer_args, **outer_kw):
+                # @settings is applied above @given, so it stamps the
+                # example budget onto *runner*; read it at call time.
+                n = min(getattr(runner, "_prop_max_examples",
+                                _FALLBACK_EXAMPLES), _FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + i)
+                    drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*outer_args, *drawn_args, **outer_kw, **drawn_kw)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco

@@ -5,6 +5,31 @@ import textwrap
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked @pytest.mark.slow")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (deselected by default; run with "
+        "--runslow or an explicit -m expression)")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Default to ``-m "not slow"``: tier-1 stays fast; an explicit
+    ``--runslow`` or any user-supplied ``-m`` expression overrides."""
+    if config.option.runslow or config.option.markexpr:
+        return
+    skip_slow = pytest.mark.skip(
+        reason="slow: needs --runslow (or -m slow)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
 def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
     """Run a snippet under a multi-device (forced host platform) jax.
 

@@ -1,7 +1,7 @@
 """Data pipeline: tokenizer, indexed dataset, sharded loader."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.data.indexed import IndexedDatasetReader, IndexedDatasetWriter
 from repro.data.loader import ShardedLoader, lm_sample_fn

@@ -55,7 +55,7 @@ def test_quantize_roundtrip_property():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from hypothesis import given, settings, strategies as st
+    from _prop import given, settings, st
     from repro.parallel.compress import dequantize_int8, quantize_int8
 
     @settings(max_examples=25, deadline=None)

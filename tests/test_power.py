@@ -4,7 +4,7 @@ import math
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.power.ctxmgr import MeasuredScope, expand_suffix, get_power
 from repro.power.frame import Frame
@@ -84,6 +84,45 @@ def test_rapl_graceful_when_absent():
     m = RaplPower(root="/nonexistent/powercap")
     assert not m.available()
     assert m.read() == {}
+
+
+def _fake_powercap(tmp_path, uj: float):
+    zone = tmp_path / "intel-rapl:0"
+    zone.mkdir(exist_ok=True)
+    (zone / "energy_uj").write_text(f"{int(uj)}\n")
+    return tmp_path
+
+
+def test_rapl_reads_fake_powercap_tree(tmp_path, monkeypatch):
+    import repro.power.methods as pm
+
+    fake_t = {"t": 100.0}
+    monkeypatch.setattr(pm.time, "monotonic", lambda: fake_t["t"])
+    root = _fake_powercap(tmp_path, 1_000_000)
+    m = RaplPower(root=str(root))
+    assert m.available()
+    assert m.read() == {"intel-rapl:0": 0.0}   # first read: no baseline
+    _fake_powercap(tmp_path, 3_000_000)        # +2 J over 2 s -> 1 W
+    fake_t["t"] = 102.0
+    assert m.read()["intel-rapl:0"] == pytest.approx(1.0)
+
+
+def test_rapl_counter_wrap_uses_post_wrap_delta(tmp_path, monkeypatch):
+    """Regression: when energy_uj wraps (new < old), read() must treat
+    the post-wrap counter value as the energy delta — not report a
+    negative (or bogus huge) power."""
+    import repro.power.methods as pm
+
+    fake_t = {"t": 50.0}
+    monkeypatch.setattr(pm.time, "monotonic", lambda: fake_t["t"])
+    root = _fake_powercap(tmp_path, 10_000_000)
+    m = RaplPower(root=str(root))
+    m.read()                                   # baseline at 10 J
+    _fake_powercap(tmp_path, 4_000_000)        # counter wrapped to 4 J
+    fake_t["t"] = 52.0
+    w = m.read()["intel-rapl:0"]
+    assert w == pytest.approx(4_000_000 / 2.0 / 1e6)  # 2 W, not negative
+    assert w >= 0.0
 
 
 def test_suffix_interpolation(monkeypatch):

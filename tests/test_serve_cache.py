@@ -1,0 +1,85 @@
+"""Slotted KV-cache ops: insert/reset/compact row semantics.
+
+Small real-model caches (reduced config, CPU) — these are the primitives
+the continuous-batching engine's admission path is built on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.cache import (
+    compact_slots, grow_caches, insert_slot, reset_slot, slotted_cache,
+)
+
+N_SLOTS, MAX_LEN, PROMPT = 3, 32, 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    c = get_config("llama3.2-3b").reduced()
+    params = lm.init(jax.random.key(0), c)
+    return c, params
+
+
+def _prefill_row(c, params, seed=0):
+    tokens = jnp.asarray(
+        np.random.default_rng(seed).integers(0, c.vocab, (1, PROMPT)))
+    _, row, _ = lm.prefill(c, params, tokens)
+    return grow_caches(row, MAX_LEN)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree)
+
+
+def test_slotted_cache_shapes_and_zeros(setup):
+    c, params = setup
+    caches = slotted_cache(c, N_SLOTS, MAX_LEN, params)
+    for leaf in _leaves(caches):
+        assert leaf.shape[1] == N_SLOTS          # batch axis is axis 1
+        assert not np.any(np.asarray(leaf, np.float32))
+
+
+def test_insert_slot_writes_only_target_row(setup):
+    c, params = setup
+    caches = slotted_cache(c, N_SLOTS, MAX_LEN, params)
+    row = _prefill_row(c, params)
+    caches = insert_slot(caches, row, jnp.int32(1))
+    for leaf, rleaf in zip(_leaves(caches), _leaves(row)):
+        got = np.asarray(leaf, np.float32)
+        np.testing.assert_array_equal(got[:, 1], np.asarray(rleaf,
+                                                            np.float32)[:, 0])
+        assert not np.any(got[:, 0]) and not np.any(got[:, 2])
+
+
+def test_reset_slot_zeroes_only_target_row(setup):
+    c, params = setup
+    caches = slotted_cache(c, N_SLOTS, MAX_LEN, params)
+    row = _prefill_row(c, params)
+    for s in range(N_SLOTS):
+        caches = insert_slot(caches, row, jnp.int32(s))
+    caches = reset_slot(caches, jnp.int32(1))
+    for leaf, rleaf in zip(_leaves(caches), _leaves(row)):
+        got = np.asarray(leaf, np.float32)
+        want = np.asarray(rleaf, np.float32)[:, 0]
+        assert not np.any(got[:, 1])             # scrubbed
+        np.testing.assert_array_equal(got[:, 0], want)   # neighbors intact
+        np.testing.assert_array_equal(got[:, 2], want)
+
+
+def test_compact_slots_gathers_rows(setup):
+    c, params = setup
+    caches = slotted_cache(c, N_SLOTS, MAX_LEN, params)
+    rows = [_prefill_row(c, params, seed=s) for s in range(N_SLOTS)]
+    for s, row in enumerate(rows):
+        caches = insert_slot(caches, row, jnp.int32(s))
+    # pack rows (2, 0) to the front, recycle row 1's content at the back
+    caches = compact_slots(caches, jnp.asarray([2, 0, 1]))
+    for i, src in enumerate([2, 0, 1]):
+        for leaf, rleaf in zip(_leaves(caches), _leaves(rows[src])):
+            np.testing.assert_array_equal(
+                np.asarray(leaf, np.float32)[:, i],
+                np.asarray(rleaf, np.float32)[:, 0])
