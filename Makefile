@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all ci bench bench-serve
+.PHONY: test test-all ci bench bench-smoke bench-serve bench-list
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,8 +14,14 @@ test-all:        ## includes @pytest.mark.slow integration tests
 ci:
 	bash scripts/ci.sh
 
-bench:
-	PYTHONPATH=src:. $(PY) -m benchmarks.run
+bench:           ## every workload, full point sets
+	$(PY) -m repro.bench run
+
+bench-smoke:     ## the smoke-tagged suite on synthetic power (CI gate)
+	$(PY) -m repro.bench run --tags smoke --power synthetic
 
 bench-serve:
-	PYTHONPATH=src:. $(PY) -m benchmarks.serve_bench --smoke
+	$(PY) -m repro.bench run --suite serve --tags smoke
+
+bench-list:
+	$(PY) -m repro.bench list

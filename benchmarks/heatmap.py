@@ -1,82 +1,21 @@
-"""Paper Fig. 4 analog: throughput heatmap over (data-parallel degree x
-global batch size), with infeasible cells marked OOM.
+"""Compatibility shim for the `heatmap` workload (paper Fig. 4).
 
-Uses the CARAML harness (Space + constraints + Runner) end-to-end — this
-is the ablation-automation the paper's JUBE layer provides. Run via
-benchmarks.run so an 8-device host platform is available.
+The benchmark now lives in `repro.bench.workloads.heatmap`; run it via
+(the CLI forces the 8-device host platform itself)
+
+  PYTHONPATH=src python -m repro.bench run --suite heatmap
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import sys
 
-from benchmarks.common import emit
-from repro.configs import get_config
-from repro.core import (
-    BenchmarkSuite, Runner, Space, Step, divisible_batch, heatmap,
-)
-from repro.core.results import save_results
-from repro.data.synthetic import synthetic_tokens
-from repro.launch.mesh import make_mesh
-from repro.models import lm
-from repro.train.optimizer import OptConfig, opt_init
-from repro.train.step import StepConfig, make_train_step
-
-SEQ = 64
+from repro.bench.cli import main as bench_main
 
 
-def make_bench_step():
-    c = get_config("gpt-117m").reduced(n_layers=2, d_model=128, d_ff=256,
-                                       n_heads=4, n_kv_heads=4, d_head=32,
-                                       vocab=2048)
-    oc = OptConfig(warmup=1, total_steps=100)
-    params = lm.init(jax.random.key(0), c)
-    opt_state = opt_init(oc, params)
-    step_fns = {}
-
-    def bench(pt, ctx):
-        import time
-        dp, gb = pt["dp"], pt["global_batch"]
-        if dp not in step_fns:
-            mesh = make_mesh((dp,), ("data",))
-            bsh = NamedSharding(mesh, P("data"))
-            step_fns[dp] = (jax.jit(
-                make_train_step(c, oc, StepConfig())), bsh)
-        step, bsh = step_fns[dp]
-        toks = jax.device_put(
-            jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ]), bsh)
-        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
-        p, o, _ = step(params, opt_state, batch)  # compile+warm
-        jax.block_until_ready(p)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            p, o, m = step(params, opt_state, batch)
-        jax.block_until_ready(p)
-        dt = (time.perf_counter() - t0) / 3
-        return {"tokens_per_s": gb * SEQ / dt, "ms": dt * 1e3}
-
-    return bench
-
-
-def main():
-    assert jax.device_count() >= 8, "run via benchmarks.run"
-    space = Space(
-        {"dp": [1, 2, 4, 8], "global_batch": [8, 16, 32],
-         "micro_batch": [1]},
-        [divisible_batch, lambda pt: pt["global_batch"] >= pt["dp"]])
-    suite = BenchmarkSuite("heatmap_fig4", space,
-                           [Step("run", make_bench_step())],
-                           result_columns=["dp", "global_batch",
-                                           "tokens_per_s", "ms"])
-    runner = Runner(suite, out_dir="artifacts/bench")
-    recs = runner.run(verbose=False)
-    print(heatmap(recs, "dp", "global_batch", "tokens_per_s"))
-    save_results(recs, "artifacts/bench", "heatmap_fig4")
-    for r in recs:
-        emit(f"heatmap/dp{r['dp']}/gb{r['global_batch']}",
-             r.get("ms", 0) * 1e3, f"tokens_per_s={r.get('tokens_per_s', 0):.0f}")
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", "--suite", "heatmap", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

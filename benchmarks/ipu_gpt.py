@@ -1,112 +1,21 @@
-"""Paper Table II analog: GPT-117M trained with PIPELINE parallelism.
+"""Compatibility shim for the `pipeline_gpt` workload (paper Table II).
 
-The Graphcore case: the model's layers are split over 4 devices (pipeline
-parallelism was the only way it fit in per-tile SRAM), throughput measured
-in tokens/s across a batch sweep, plus the pipeline-bubble overhead. Run
-via benchmarks.run so a forced 4-device host platform is available.
+The benchmark now lives in `repro.bench.workloads.pipeline_gpt`; run it
+via (the CLI forces the 4-device host platform itself)
+
+  PYTHONPATH=src python -m repro.bench run --suite pipeline_gpt
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import sys
 
-from benchmarks.common import emit, time_step
-from repro.configs import get_config
-from repro.core.results import save_results, table
-from repro.data.synthetic import synthetic_tokens
-from repro.launch.mesh import make_mesh
-from repro.models.common import apply_mlp, apply_norm
-from repro.models import lm
-from repro.parallel.pipeline import (
-    bubble_fraction, pipeline_forward, stage_params_split,
-)
-
-SEQ = 64
-N_STAGES = 4
+from repro.bench.cli import main as bench_main
 
 
-def run(batches=(16, 32, 64)):
-    assert jax.device_count() >= N_STAGES, "run via benchmarks.run"
-    c = get_config("gpt-117m").reduced(n_layers=8, d_model=128, d_ff=512,
-                                       n_heads=4, n_kv_heads=4, d_head=32,
-                                       vocab=4096)
-    mesh = make_mesh((N_STAGES,), ("stage",))
-    params = lm.init(jax.random.key(0), c)
-    stage_params = stage_params_split(params["layers"], N_STAGES)
-
-    def layer_fn(stage_p, x):
-        # apply this stage's layers sequentially
-        def body(x, lp):
-            sp = lp["slot0"]
-            h = apply_norm(c, sp["norm1"], x)
-            from repro.models import attention as attn
-            h = attn.self_attention(c, sp["attn"], h, causal=True)
-            x = x + h
-            x = x + apply_mlp(c, sp["mlp"], apply_norm(c, sp["norm2"], x))
-            return x, None
-        x, _ = jax.lax.scan(body, x, stage_p)
-        return x
-
-    records = []
-    n_mb = 8
-    for gb in batches:
-        mb = gb // n_mb
-        toks = jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ])
-        x = lm._inputs_to_embeds(c, params, toks, None)
-        x_mb = x.reshape(n_mb, mb, SEQ, c.d_model)
-
-        fwd = jax.jit(lambda sp, xs: pipeline_forward(
-            mesh, "stage", layer_fn, sp, xs))
-        dt, wh, src = time_step(fwd, stage_params, x_mb, warmup=1, iters=3)
-        tps = gb * SEQ / dt
-        rec = {"global_batch": gb, "tokens_per_s": tps,
-               "ms_per_iter": dt * 1e3, "energy_wh": wh,
-               "tokens_per_wh": (gb * SEQ / wh) if wh > 0 else 0.0,
-               "bubble_fraction": bubble_fraction(N_STAGES, n_mb),
-               "power_source": src}
-        records.append(rec)
-        emit(f"ipu_gpt/pp{N_STAGES}/gb{gb}", dt * 1e6,
-             f"tokens_per_s={tps:.0f}")
-    save_results(records, "artifacts/bench", "ipu_gpt_table2")
-    return records
-
-
-def verify_pipeline_correctness():
-    """Pipeline output == sequential execution of the same layers."""
-    import numpy as np
-    c = get_config("gpt-117m").reduced(n_layers=4, d_model=64, d_ff=128,
-                                       n_heads=2, n_kv_heads=2, d_head=32,
-                                       vocab=512)
-    mesh = make_mesh((N_STAGES,), ("stage",))
-    params = lm.init(jax.random.key(0), c)
-    stage_params = stage_params_split(params["layers"], N_STAGES)
-
-    def layer_fn(stage_p, x):
-        def body(x, lp):
-            sp = lp["slot0"]
-            from repro.models import attention as attn
-            h = apply_norm(c, sp["norm1"], x)
-            x = x + attn.self_attention(c, sp["attn"], h, causal=True)
-            x = x + apply_mlp(c, sp["mlp"], apply_norm(c, sp["norm2"], x))
-            return x, None
-        return jax.lax.scan(body, x, stage_p)[0]
-
-    toks = jnp.asarray(synthetic_tokens(8, 32, c.vocab)[:, :32])
-    x = lm._inputs_to_embeds(c, params, toks, None)
-    x_mb = x.reshape(4, 2, 32, c.d_model)
-    got = pipeline_forward(mesh, "stage", layer_fn, stage_params, x_mb)
-    want = layer_fn(jax.tree.map(
-        lambda a: a.reshape(-1, *a.shape[2:]), stage_params), x)
-    np.testing.assert_allclose(
-        np.asarray(got.reshape(x.shape), np.float32),
-        np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)
-    print("pipeline == sequential: OK")
-
-
-def main():
-    verify_pipeline_correctness()
-    print(table(run(), floatfmt="{:.2f}"))
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", "--suite", "pipeline_gpt", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

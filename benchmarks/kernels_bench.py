@@ -1,51 +1,20 @@
-"""Kernel microbenchmarks: Pallas (interpret) vs XLA reference.
+"""Compatibility shim for the `kernels` workload (Pallas microbench).
 
-Interpret mode executes the kernel body in Python — the timing column is
-a correctness-scale signal only; the real figure of merit on TPU is the
-roofline delta accounted in EXPERIMENTS.md par.Perf (flash attention
-removes the O(S*T) score traffic from the memory term).
+The benchmark now lives in `repro.bench.workloads.kernels`; run it via
+
+  PYTHONPATH=src python -m repro.bench run --suite kernels
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import sys
 
-from benchmarks.common import emit, time_step
-from repro.core.results import save_results, table
-from repro.kernels import ops
+from repro.bench.cli import main as bench_main
 
 
-def run():
-    records = []
-    key = jax.random.key(0)
-    for (b, s, h, kh, dh) in [(1, 256, 4, 2, 64), (2, 512, 8, 8, 64)]:
-        ks = jax.random.split(key, 3)
-        q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
-        k = jax.random.normal(ks[1], (b, s, kh, dh), jnp.float32)
-        v = jax.random.normal(ks[2], (b, s, kh, dh), jnp.float32)
-        for impl in ("xla", "pallas"):
-            dt, _, _ = time_step(
-                lambda: ops.flash_attention(
-                    q, k, v, impl=impl, interpret=impl == "pallas"),
-                warmup=1, iters=2, measure_power=False)
-            name = f"flash/{impl}/b{b}s{s}h{h}kh{kh}"
-            records.append({"kernel": name, "us": dt * 1e6})
-            emit(name, dt * 1e6, "interpret=1" if impl == "pallas" else "ref")
-    x = jax.random.normal(key, (512, 1024), jnp.float32)
-    sc = jnp.ones((1024,))
-    for impl in ("xla", "pallas"):
-        dt, _, _ = time_step(
-            lambda: ops.rmsnorm(x, sc, impl=impl, interpret=impl == "pallas"),
-            warmup=1, iters=3, measure_power=False)
-        records.append({"kernel": f"rmsnorm/{impl}", "us": dt * 1e6})
-        emit(f"rmsnorm/{impl}", dt * 1e6, "fused" if impl == "pallas" else "ref")
-    save_results(records, "artifacts/bench", "kernels")
-    return records
-
-
-def main():
-    print(table(run(), floatfmt="{:.1f}"))
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", "--suite", "kernels", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

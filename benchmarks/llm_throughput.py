@@ -1,64 +1,20 @@
-"""Paper Fig. 2 analog: LLM training throughput + energy vs global batch.
+"""Compatibility shim for the `llm_train` workload (paper Fig. 2).
 
-Trains the paper's GPT decoder (reduced for this CPU host) across a global
-batch sweep; reports tokens/s, energy/step, tokens/Wh — the exact figures
-of merit of CARAML's LLM benchmark.
+The benchmark now lives in `repro.bench.workloads.llm_train`; run it via
+
+  PYTHONPATH=src python -m repro.bench run --suite llm_train
 """
 from __future__ import annotations
 
-import dataclasses
+import sys
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import emit, time_step
-from repro.configs import get_config
-from repro.core.results import save_results, table
-from repro.data.synthetic import synthetic_tokens
-from repro.models import lm
-from repro.train.optimizer import OptConfig, opt_init
-from repro.train.step import StepConfig, make_train_step
-
-SEQ = 128
-BATCHES = (16, 32, 64)
+from repro.bench.cli import main as bench_main
 
 
-def run(arch: str = "gpt-800m", batches=BATCHES, seq: int = SEQ):
-    c = get_config(arch).reduced(d_model=128, n_layers=4, d_ff=512,
-                                 vocab=8192, n_heads=4, n_kv_heads=4,
-                                 d_head=32)
-    oc = OptConfig(warmup=2, total_steps=1000)
-    params = lm.init(jax.random.key(0), c)
-    opt_state = opt_init(oc, params)
-    step = jax.jit(make_train_step(c, oc, StepConfig(microbatches=4)))
-    records = []
-    for gb in batches:
-        toks = jnp.asarray(synthetic_tokens(gb, seq, c.vocab)[:, :seq])
-        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
-        p, o = params, opt_state
-
-        def one(p_o_batch=batch):
-            nonlocal p, o
-            p, o, m = step(p, o, p_o_batch)
-            return m["loss"]
-
-        dt, wh, src = time_step(one, warmup=1, iters=3)
-        tps = gb * seq / dt
-        rec = {"arch": c.name, "global_batch": gb, "seq": seq,
-               "tokens_per_s": tps, "ms_per_step": dt * 1e3,
-               "energy_wh_per_step": wh,
-               "tokens_per_wh": (gb * seq / wh) if wh > 0 else 0.0,
-               "power_source": src}
-        records.append(rec)
-        emit(f"llm_throughput/{arch}/gb{gb}", dt * 1e6,
-             f"tokens_per_s={tps:.0f}")
-    save_results(records, "artifacts/bench", "llm_throughput")
-    return records
-
-
-def main():
-    print(table(run(), floatfmt="{:.2f}"))
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", "--suite", "llm_train", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,54 +1,20 @@
-"""Paper Fig. 3 / Table III analog: ResNet50 training throughput + energy.
+"""Compatibility shim for the `resnet50` workload (Fig. 3 / Table III).
 
-images/s and images/Wh across a batch sweep (single device), using the
-data-parallel train step (the Horovod-analog path).
+The benchmark now lives in `repro.bench.workloads.resnet50`; run it via
+
+  PYTHONPATH=src python -m repro.bench run --suite resnet50
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import sys
 
-from benchmarks.common import emit, time_step
-from repro.configs.resnet50 import CONFIG
-from repro.core.results import save_results, table
-from repro.data.synthetic import synthetic_images
-from repro.models import resnet
-from repro.train.optimizer import OptConfig, opt_init
-from repro.train.step import make_resnet_train_step
+from repro.bench.cli import main as bench_main
 
 
-def run(batches=(16, 32, 64)):
-    c = CONFIG.reduced(img_size=64, width=16)
-    oc = OptConfig(warmup=2, total_steps=1000)
-    params = resnet.init(jax.random.key(0), c)
-    opt_state = opt_init(oc, params)
-    step = jax.jit(make_resnet_train_step(c, oc))
-    records = []
-    for gb in batches:
-        imgs, labels = synthetic_images(gb, c.img_size, c.n_classes)
-        batch = {"images": jnp.asarray(imgs), "labels": jnp.asarray(labels)}
-        p, o = params, opt_state
-
-        def one():
-            nonlocal p, o
-            p, o, m = step(p, o, batch)
-            return m["loss"]
-
-        dt, wh, src = time_step(one, warmup=1, iters=3)
-        ips = gb / dt
-        rec = {"model": c.name, "global_batch": gb, "images_per_s": ips,
-               "ms_per_step": dt * 1e3, "energy_wh_per_step": wh,
-               "images_per_wh": (gb / wh) if wh > 0 else 0.0,
-               "power_source": src}
-        records.append(rec)
-        emit(f"resnet50/gb{gb}", dt * 1e6, f"images_per_s={ips:.1f}")
-    save_results(records, "artifacts/bench", "resnet50_fig3")
-    return records
-
-
-def main():
-    print(table(run(), floatfmt="{:.2f}"))
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", "--suite", "resnet50", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

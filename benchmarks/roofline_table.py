@@ -1,54 +1,20 @@
-"""Render the roofline table (EXPERIMENTS.md par.Roofline source) from the
-dry-run artifacts in artifacts/dryrun/."""
+"""Compatibility shim for the `roofline` workload (par.Roofline table).
+
+The benchmark now lives in `repro.bench.workloads.roofline`; run it via
+
+  PYTHONPATH=src python -m repro.bench run --suite roofline
+"""
 from __future__ import annotations
 
-import json
-import pathlib
+import sys
 
-from repro.core.results import save_results, table
-
-ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+from repro.bench.cli import main as bench_main
 
 
-def load(mesh: str = "single"):
-    rows = []
-    for f in sorted(ART.glob(f"{mesh}__*.json")):
-        r = json.loads(f.read_text())
-        if "roofline" not in r:
-            if "skipped" in r:
-                rows.append({"arch": r["arch"], "shape": r["shape"],
-                             "bottleneck": "SKIP",
-                             "note": r["skipped"]})
-            continue
-        rf = r["roofline"]
-        rows.append({
-            "arch": r["arch"], "shape": r["shape"],
-            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
-            "collective_s": rf["collective_s"],
-            "bottleneck": rf["bottleneck"],
-            "roofline_frac": rf["roofline_fraction"],
-            "useful_flops": rf["useful_flops_ratio"],
-            "hbm_gib": r.get("bytes_per_device_tpu",
-                             r.get("bytes_per_device", 0)) / 2**30,
-            "fits": r.get("fits_hbm_16g"),
-        })
-    return rows
-
-
-def main():
-    for mesh in ("single", "multi"):
-        rows = load(mesh)
-        if not rows:
-            continue
-        print(f"\n== {mesh}-pod roofline (per-device seconds/step) ==")
-        print(table(rows, floatfmt="{:.4f}"))
-        save_results(rows, "artifacts/bench", f"roofline_{mesh}")
-        for r in rows:
-            if r.get("bottleneck") != "SKIP":
-                print(f"roofline/{mesh}/{r['arch']}/{r['shape']},"
-                      f"{r['compute_s'] * 1e6:.0f},"
-                      f"frac={r['roofline_frac']:.3f}")
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", "--suite", "roofline", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,47 +1,23 @@
-"""Benchmark driver: one harness per paper table/figure.
+"""Compatibility shim: the benchmark driver is now `python -m repro.bench`.
 
-Each benchmark runs in its own subprocess so multi-device cases (pipeline
-parallelism, DP heatmaps) can force their own host-platform device count
-without affecting the others. Prints ``name,us_per_call,derived`` CSV.
+The old per-benchmark subprocess loop is gone — one process runs every
+workload through the WorkloadSpec registry, and multi-device workloads
+are satisfied by a single XLA_FLAGS host-platform re-exec when needed.
+
+  PYTHONPATH=src python -m repro.bench run              # everything
+  PYTHONPATH=src python -m repro.bench run --tags smoke # CI smoke set
 """
 from __future__ import annotations
 
-import os
-import pathlib
-import subprocess
 import sys
 
-BENCHES = [
-    # (module, paper analog, forced device count)
-    ("benchmarks.llm_throughput", "Fig. 2 (LLM tokens/s + energy)", 1),
-    ("benchmarks.serve_bench", "serving: continuous batching + Wh/token", 1),
-    ("benchmarks.resnet50_bench", "Fig. 3/Table III (ResNet50)", 1),
-    ("benchmarks.ipu_gpt", "Table II (pipeline-parallel GPT-117M)", 4),
-    ("benchmarks.heatmap", "Fig. 4 (dp x batch heatmap)", 8),
-    ("benchmarks.kernels_bench", "kernel microbench", 1),
-    ("benchmarks.roofline_table", "par.Roofline table", 1),
-]
+from repro.bench.cli import main as bench_main
 
 
-def main() -> None:
-    root = pathlib.Path(__file__).resolve().parents[1]
-    failures = []
-    for mod, desc, ndev in BENCHES:
-        print(f"\n###### {mod} — {desc} ######", flush=True)
-        env = dict(os.environ)
-        env["PYTHONPATH"] = f"{root}/src:{root}"
-        if ndev > 1:
-            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
-                                f" --xla_force_host_platform_device_count={ndev}")
-        proc = subprocess.run([sys.executable, "-m", mod], env=env,
-                              cwd=root, timeout=3600)
-        if proc.returncode != 0:
-            failures.append(mod)
-            print(f"FAILED: {mod}", flush=True)
-    if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
-    print("\nall benchmarks complete")
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return bench_main(["run", *argv])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,138 +1,46 @@
-"""Serving benchmark: continuous batching vs fixed batch under Poisson load.
+"""Compatibility shim for the `serve` workload (continuous batching +
+Wh/token; see benchmarks/README.md).
 
-The MLPerf-Power/CARAML serving point: drive the ServeEngine with a
-seeded synthetic Poisson arrival process and variable per-request token
-budgets, and report — per (arrival-rate x slot-count) cell and policy —
+The benchmark now lives in `repro.bench.workloads.serve`; run it via
 
-  decode_tok_s    useful generated tokens per wall second
-  ttft_s          mean time-to-first-token (includes queueing)
-  wh_per_token    energy per generated token (attributed per request)
-  wh_per_request  energy per served request
+  PYTHONPATH=src python -m repro.bench run --suite serve --tags smoke
+  PYTHONPATH=src python -m repro.bench run --suite serve   # full sweep
 
-Energy comes from RAPL when the host exposes powercap counters,
-otherwise the analytic TPU power model (clearly labeled). Both policies
-run the SAME jitted programs on the SAME slot pool; the only difference
-is admission (iteration-level refill vs batch-fill barrier), so the
-speedup column isolates the scheduling win.
-
-  PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke
+``run()`` is kept callable for the acceptance test
+(tests/test_serve_energy.py): it drives the WorkloadRunner directly and
+returns the flat per-(cell x policy) records.
 """
 from __future__ import annotations
 
-import argparse
+import sys
 
-import jax
-import numpy as np
-
-from benchmarks.common import emit, pick_power_methods
-from repro.configs import get_config
-from repro.core.results import save_results, table
-from repro.data.synthetic import synthetic_tokens
-from repro.models import lm
-from repro.serve.engine import ServeEngine
-from repro.serve.requests import Request
-
-PROMPT_LEN = 8          # fixed: one prefill trace for the whole sweep
-MAX_LEN = 96            # slot capacity (multiple of reduced ssm_chunk)
-# Bimodal token budgets (the realistic serving mix: mostly short
-# answers, a tail of long generations). The fixed-batch policy pays
-# max(batch) decode steps to produce mean(batch) useful tokens, so the
-# short/long mix is precisely what iteration-level refill monetizes.
-SHORT_LO, SHORT_HI = 2, 8
-LONG_LO, LONG_HI = 64, 88
-P_LONG = 0.25
+from repro.bench.cli import main as bench_main
+from repro.bench.runner import WorkloadRunner
+from repro.bench.spec import get_workload
 
 
-def poisson_requests(n: int, rate_hz: float, vocab: int,
-                     seed: int = 0) -> list[Request]:
-    """Seeded synthetic request stream: exponential inter-arrival gaps
-    (Poisson process) and bimodal short/long token budgets."""
-    rng = np.random.default_rng(seed)
-    prompts = synthetic_tokens(n, PROMPT_LEN, vocab, seed)[:, :PROMPT_LEN]
-    gaps = rng.exponential(1.0 / rate_hz, size=n)
-    arrivals = np.cumsum(gaps) - gaps[0]   # first request arrives at t=0
-    long = rng.random(n) < P_LONG
-    budgets = np.where(long, rng.integers(LONG_LO, LONG_HI + 1, size=n),
-                       rng.integers(SHORT_LO, SHORT_HI + 1, size=n))
-    return [Request(rid=i, prompt=prompts[i], max_new_tokens=int(budgets[i]),
-                    arrival_s=float(arrivals[i])) for i in range(n)]
+def run(arch: str = "llama3.2-3b", *, rates=None, slots=None,
+        seed: int = 0, smoke: bool = False):
+    """Run the serve workload in-process; returns flat result records."""
+    assert seed == 0, "the registered serve workload runs the seed-0 stream"
+    overrides: dict = {"arch": [arch]}
+    if rates is not None:
+        overrides["rate_hz"] = list(rates)
+    if slots is not None:
+        overrides["slots"] = list(slots)
+    runner = WorkloadRunner(get_workload("serve"), smoke=smoke,
+                            point_overrides=overrides)
+    return [r.flat() for r in runner.run(verbose=False)]
 
 
-def run_cell(engine: ServeEngine, requests, policy: str) -> dict:
-    out = engine.serve(requests, policy=policy)
-    s = out.summary
-    return {
-        "policy": policy,
-        "n_requests": s.n_requests,
-        "n_tokens": s.n_tokens,
-        "decode_tok_s": s.decode_tok_s,
-        "ttft_s": s.mean_ttft_s,
-        "p95_ttft_s": s.p95_ttft_s,
-        "wh_per_token": s.wh_per_token,
-        "wh_per_request": s.wh_per_request,
-        "overhead_wh": s.overhead_wh,
-        "wall_s": s.wall_s,
-    }
-
-
-def run(arch: str = "llama3.2-3b", *, n_requests: int = 48,
-        rates=(100.0, 400.0), slots=(4, 8), seed: int = 0,
-        smoke: bool = False):
-    if smoke:
-        # enough requests that the drain tail (last long generations
-        # finishing with partially-empty slots) amortizes away
-        n_requests, rates, slots = 64, (300.0,), (4,)
-    c = get_config(arch).reduced()
-    params = lm.init(jax.random.key(seed), c)
-    methods, source = pick_power_methods()
-    records = []
-    for n_slots in slots:
-        engine = ServeEngine(c, params, n_slots=n_slots, max_len=MAX_LEN,
-                             power_methods=methods)
-        # warmup: compile prefill + slot decode outside any measured cell
-        # (the first serve() otherwise charges XLA compilation to the
-        # first policy's wall clock and energy)
-        engine.serve(poisson_requests(n_slots, 1e6, c.vocab, seed + 1))
-        for rate in rates:
-            requests = poisson_requests(n_requests, rate, c.vocab, seed)
-            cells = {}
-            for policy in ("fixed", "continuous"):
-                rec = run_cell(engine, requests, policy)
-                rec.update(arch=c.name, slots=n_slots, rate_hz=rate,
-                           power_source=source)
-                cells[policy] = rec
-                records.append(rec)
-                emit(f"serve/{arch}/s{n_slots}/r{rate:g}/{policy}",
-                     rec["wall_s"] * 1e6,
-                     f"decode_tok_s={rec['decode_tok_s']:.1f}")
-            speedup = (cells["continuous"]["decode_tok_s"]
-                       / max(cells["fixed"]["decode_tok_s"], 1e-9))
-            for policy in cells:
-                cells[policy]["speedup_vs_fixed"] = speedup
-            print(f"[serve_bench] slots={n_slots} rate={rate:g}/s "
-                  f"continuous/fixed tokens/s = {speedup:.2f}x")
-    save_results(records, "artifacts/bench", "serve_bench")
-    return records
-
-
-COLUMNS = ["arch", "policy", "slots", "rate_hz", "n_tokens", "decode_tok_s",
-           "ttft_s", "wh_per_token", "wh_per_request", "speedup_vs_fixed"]
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--smoke", action="store_true",
-                    help="single sweep cell, <60s on CPU")
-    ap.add_argument("--requests", type=int, default=48)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    records = run(args.arch, n_requests=args.requests, seed=args.seed,
-                  smoke=args.smoke)
-    print(table([{k: r.get(k) for k in COLUMNS} for r in records],
-                floatfmt="{:.4g}"))
-    return records
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    fwd = ["run", "--suite", "serve"]
+    if "--smoke" in argv:
+        argv.remove("--smoke")
+        fwd += ["--tags", "smoke"]
+    return bench_main(fwd + argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: collection must be clean, then the suite must pass.
+# Tier-1 CI gate: collection must be clean, then the suite must pass,
+# then the smoke benchmark suite must run end-to-end.
 #
 # Run from the repo root:  bash scripts/ci.sh
 set -euo pipefail
@@ -14,3 +15,10 @@ python -m pytest -q --collect-only >/dev/null
 
 # 2. The tier-1 command from ROADMAP.md.
 python -m pytest -x -q
+
+# 3. Every smoke-tagged workload end-to-end through the unified CLI on
+#    the deterministic synthetic power backend (multi-device workloads
+#    get their forced host platform via the CLI's XLA_FLAGS re-exec).
+python -m repro.bench list
+python -m repro.bench run --tags smoke --power synthetic \
+    --out artifacts/ci-bench

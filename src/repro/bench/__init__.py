@@ -1,0 +1,30 @@
+"""repro.bench — the unified WorkloadSpec benchmark subsystem.
+
+One registry, one runner, one CLI for every paper workload:
+
+  python -m repro.bench list
+  python -m repro.bench run --tags smoke
+  python -m repro.bench run --suite serve --points rate_hz=200
+  python -m repro.bench report
+
+Benchmarks declare a :class:`WorkloadSpec` via the :func:`workload`
+decorator (see ``repro.bench.workloads``); :class:`WorkloadRunner`
+executes them with runner-owned power selection, warmup/iters timing,
+retries, and straggler detection, emitting schema-versioned
+:class:`ResultRecord`s under ``artifacts/bench/<workload>/``.
+"""
+from repro.bench.context import Measurement, RunContext
+from repro.bench.records import SCHEMA_VERSION, ResultRecord, save_records
+from repro.bench.runner import DeviceCountError, WorkloadRunner
+from repro.bench.spec import (
+    UnknownWorkloadError, WorkloadSpec, get_workload, iter_workloads,
+    register, unregister, workload, workload_names,
+)
+
+__all__ = [
+    "Measurement", "RunContext", "SCHEMA_VERSION", "ResultRecord",
+    "save_records", "DeviceCountError", "WorkloadRunner",
+    "UnknownWorkloadError", "WorkloadSpec", "get_workload",
+    "iter_workloads", "register", "unregister", "workload",
+    "workload_names",
+]

@@ -1,0 +1,236 @@
+"""``python -m repro.bench`` — the single CLI for every benchmark.
+
+  python -m repro.bench list [--tags t1,t2]
+  python -m repro.bench run [--suite a,b] [--tags smoke] [--points k=v,...]
+                            [--power auto|rapl|tpu_model|synthetic|none]
+                            [--warmup N] [--iters N] [--out DIR]
+  python -m repro.bench report [--suite a,b] [--out DIR]
+
+Replaces the old per-benchmark subprocess driver: one process runs every
+selected workload, sharing the jax runtime. Multi-device workloads are
+satisfied by configuring the host platform device count up front —
+in-process where the jax version supports it, otherwise by re-exec'ing
+once with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set
+before the backend initializes.
+
+Each record also prints the classic ``name,us_per_call,derived`` CSV
+line, so existing log scrapers keep working.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+from typing import Optional, Sequence
+
+from repro.bench import workloads  # noqa: F401 - populates the registry
+from repro.bench.records import load_records
+from repro.bench.runner import WorkloadRunner
+from repro.bench.spec import (
+    UnknownWorkloadError, get_workload, iter_workloads,
+)
+from repro.core.results import heatmap, table
+
+_REEXEC_MARKER = "REPRO_BENCH_REEXEC"
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _parse_points(s: Optional[str]) -> Optional[dict]:
+    """``k=v,k2=v2`` -> axis overrides, values coerced to int/float."""
+    if not s:
+        return None
+    out: dict = {}
+    for part in s.split(","):
+        if "=" not in part:
+            raise SystemExit(f"--points: expected k=v, got {part!r}")
+        k, v = part.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out.setdefault(k.strip(), []).append(v)
+    return out
+
+
+def _parse_list(s: Optional[str]) -> Optional[list[str]]:
+    return [x.strip() for x in s.split(",") if x.strip()] if s else None
+
+
+def _select(args) -> list:
+    try:
+        return iter_workloads(names=_parse_list(args.suite),
+                              tags=_parse_list(args.tags))
+    except UnknownWorkloadError as e:
+        raise SystemExit(f"error: {e}")
+
+
+def ensure_devices(needed: int, argv: Sequence[str]) -> Optional[int]:
+    """Make >= ``needed`` jax devices available to this run.
+
+    Returns None when the current process can proceed; otherwise re-execs
+    the CLI once with the host platform device count forced via XLA_FLAGS
+    (set before jax initializes in the child) and returns its exit code.
+    """
+    if needed <= 1:
+        return None
+    import jax
+    try:
+        # newer jax: in-process host-platform config (pre-backend-init)
+        jax.config.update("jax_num_cpu_devices", needed)
+    except Exception:  # noqa: BLE001 - option missing or backend is up
+        pass
+    if jax.device_count() >= needed:
+        return None
+    if os.environ.get(_REEXEC_MARKER):
+        raise SystemExit(
+            f"error: {needed} devices required but only "
+            f"{jax.device_count()} available even after forcing "
+            f"the host platform device count")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" {_FORCE_FLAG}={needed}").strip()
+    env[_REEXEC_MARKER] = "1"
+    # the child must find repro even when the parent got it via sys.path
+    src_dir = str(pathlib.Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = ":".join(
+        p for p in (src_dir, env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.bench", *argv], env=env)
+    return proc.returncode
+
+
+def _emit_lines(spec, records) -> None:
+    """The classic ``name,us_per_call,derived`` CSV contract."""
+    for rec in records:
+        if not rec.ok:
+            continue
+        pt = "/".join(f"{k}={v}" for k, v in rec.point.items())
+        us = float(rec.metrics.get("seconds", 0.0)) * 1e6
+        derived = ""
+        if spec.primary_metric and spec.primary_metric in rec.metrics:
+            derived = (f"{spec.primary_metric}="
+                       f"{rec.metrics[spec.primary_metric]:.4g}")
+        print(f"{spec.name}/{pt},{us:.1f},{derived}")
+
+
+def _render(spec, records) -> None:
+    flat = [r.flat() for r in records]
+    print(table(flat, spec.result_columns, floatfmt="{:.4g}"))
+    if spec.heatmap_keys:
+        row, col, val = spec.heatmap_keys
+        ok = [f for f in flat if val in f]
+        if ok:
+            print(heatmap(ok, row, col, val))
+
+
+def cmd_list(args) -> int:
+    specs = _select(args)
+    rows = [{"workload": s.name, "devices": s.n_devices,
+             "points": len(s.space),
+             "tags": ",".join(sorted(s.tags)),
+             "paper_analog": s.analog} for s in specs]
+    print(table(rows))
+    return 0
+
+
+def cmd_run(args, argv: Sequence[str]) -> int:
+    specs = _select(args)
+    if not specs:
+        print("no workloads selected")
+        return 0
+    rc = ensure_devices(max(s.n_devices for s in specs), argv)
+    if rc is not None:
+        return rc
+    smoke = "smoke" in (_parse_list(args.tags) or [])
+    failures = []
+    for spec in specs:
+        print(f"\n###### {spec.name} — {spec.analog} ######", flush=True)
+        runner = WorkloadRunner(
+            spec, out_dir=args.out, power=args.power,
+            warmup=args.warmup, iters=args.iters, smoke=smoke,
+            point_overrides=_parse_points(args.points),
+            retries=args.retries)
+        records = runner.run(verbose=args.verbose)
+        _render(spec, records)
+        _emit_lines(spec, records)
+        bad = [r for r in records if r.status == "error"]
+        if bad:
+            failures.append(spec.name)
+            for r in bad:
+                print(f"FAILED: {spec.name} {r.point}: {r.error}",
+                      file=sys.stderr)
+    if failures:
+        print(f"\nbenchmark failures: {failures}", file=sys.stderr)
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+def cmd_report(args) -> int:
+    out = pathlib.Path(args.out)
+    names = _parse_list(args.suite) or sorted(
+        p.parent.name for p in out.glob("*/results.json"))
+    shown = 0
+    for name in names:
+        path = out / name / "results.json"
+        if not path.exists():
+            print(f"(no results for {name!r} under {out})")
+            continue
+        try:
+            spec = get_workload(name)
+        except UnknownWorkloadError:
+            spec = None
+        records = load_records(path)
+        print(f"\n###### {name} ######")
+        if spec is not None:
+            _render(spec, records)
+        else:
+            print(table([r.flat() for r in records], floatfmt="{:.4g}"))
+        shown += 1
+    return 0 if shown or not names else 1
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench",
+        description="CARAML-style benchmark suite: one registry, one "
+                    "runner, one CLI for every paper workload.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_list = sub.add_parser("list", help="show registered workloads")
+    p_list.add_argument("--suite", help="comma-separated workload names")
+    p_list.add_argument("--tags", help="filter by tags (OR)")
+
+    p_run = sub.add_parser("run", help="run selected workloads")
+    p_run.add_argument("--suite", help="comma-separated workload names "
+                                       "(default: all)")
+    p_run.add_argument("--tags", help="select by tags (OR); 'smoke' also "
+                                      "switches to the reduced point sets")
+    p_run.add_argument("--points", help="axis overrides, k=v,k2=v2 "
+                                        "(repeat k for multiple values)")
+    p_run.add_argument("--power", default="auto",
+                       choices=["auto", "rapl", "tpu_model", "synthetic",
+                                "none"],
+                       help="power backend (default: auto = RAPL -> "
+                            "TPU-model -> synthetic)")
+    p_run.add_argument("--warmup", type=int, default=1)
+    p_run.add_argument("--iters", type=int, default=3)
+    p_run.add_argument("--retries", type=int, default=1)
+    p_run.add_argument("--out", default="artifacts/bench")
+    p_run.add_argument("--quiet", dest="verbose", action="store_false")
+
+    p_rep = sub.add_parser("report", help="render saved results")
+    p_rep.add_argument("--suite", help="comma-separated workload names")
+    p_rep.add_argument("--out", default="artifacts/bench")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "list":
+        return cmd_list(args)
+    if args.cmd == "run":
+        return cmd_run(args, argv)
+    return cmd_report(args)

@@ -1,0 +1,105 @@
+"""RunContext + Measurement: the runner-owned side of a workload run.
+
+Everything the benchmarks used to hand-roll (``pick_power_methods`` /
+``time_step`` / per-file caches) lives here once: the selected power
+backend with its label, warmup/iters timing with trapezoid-integrated
+energy, and a cross-point memo so sweeps compile jitted programs once.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+from repro.power.ctxmgr import get_power
+from repro.power.methods import PowerMethod
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One timed region: seconds and energy per iteration, labeled."""
+
+    seconds: float              # wall seconds per iteration
+    energy_wh: float            # Wh per iteration (0.0 when power="none")
+    power_source: str
+    iters: int
+    warmup: int
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6
+
+    @property
+    def ms(self) -> float:
+        return self.seconds * 1e3
+
+
+class RunContext:
+    """Per-run services handed to ``WorkloadSpec.build``.
+
+    ``measure`` is the single timing/energy path for every workload;
+    ``memo`` caches expensive setup (params, jitted steps) across the
+    points of a sweep; ``power_methods``/``power_source`` are available
+    directly for workloads that orchestrate their own measurement (the
+    serve engine samples power synchronously at step boundaries).
+    """
+
+    def __init__(self, *, out_dir="artifacts/bench",
+                 power_methods: Sequence[PowerMethod] = (),
+                 power_source: str = "none",
+                 power_interval_ms: float = 20.0,
+                 warmup: int = 1, iters: int = 3, smoke: bool = False):
+        self.out_dir = pathlib.Path(out_dir)
+        self.power_methods = list(power_methods)
+        self.power_source = power_source
+        self.power_interval_ms = power_interval_ms
+        self.warmup = warmup
+        self.iters = iters
+        self.smoke = smoke
+        self.cache: dict = {}
+
+    def memo(self, key, factory: Callable[[], object]):
+        """Cross-point cache: build once, reuse for every sweep point."""
+        if key not in self.cache:
+            self.cache[key] = factory()
+        return self.cache[key]
+
+    def measure(self, fn: Callable, *args, warmup: Optional[int] = None,
+                iters: Optional[int] = None, power: bool = True,
+                **kw) -> Measurement:
+        """Warmup + timed iterations around ``fn(*args, **kw)``.
+
+        Blocks on the last returned value (jax async dispatch) before
+        reading the clock; wraps the timed window in the jpwr-style power
+        scope when measurement is enabled, charging energy per iteration.
+        """
+        import jax
+
+        warmup = self.warmup if warmup is None else warmup
+        iters = max(self.iters if iters is None else iters, 1)
+        out = None
+        for _ in range(warmup):
+            out = fn(*args, **kw)
+        if out is not None:
+            jax.block_until_ready(out)
+        methods = self.power_methods if power else []
+        t0 = time.perf_counter()
+        if methods:
+            with get_power(methods, self.power_interval_ms) as scope:
+                for _ in range(iters):
+                    out = fn(*args, **kw)
+                if out is not None:
+                    jax.block_until_ready(out)
+            energy = scope.total_energy_wh() / iters
+        else:
+            for _ in range(iters):
+                out = fn(*args, **kw)
+            if out is not None:
+                jax.block_until_ready(out)
+            energy = 0.0
+        dt = (time.perf_counter() - t0) / iters
+        return Measurement(seconds=dt, energy_wh=energy,
+                           power_source=self.power_source if power
+                           else "none",
+                           iters=iters, warmup=warmup)

@@ -1,0 +1,91 @@
+"""ResultRecord — the normalized, schema-versioned benchmark result.
+
+Every workload point produces exactly one record: the point, the metrics,
+the labeled power source, device count, attempt count, and status. The
+on-disk layout under ``artifacts/bench/<workload>/`` is
+
+  results.json   {"schema_version": N, "workload": ..., "records": [...]}
+  results.csv    flat rows (point + metrics columns), schema_version column
+  manifest.json  host/jax/flags provenance (core.manifest)
+
+written through :mod:`repro.core.results` so the files are atomic and a
+partially-interrupted sweep never truncates completed points.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+from repro.core.results import atomic_write_text
+from repro.power.frame import Frame
+
+SCHEMA_VERSION = 1
+
+
+@dataclass
+class ResultRecord:
+    """One (workload x point) outcome in the normalized schema."""
+
+    workload: str
+    point: dict
+    metrics: dict = field(default_factory=dict)
+    power_source: str = "none"
+    n_devices: int = 1
+    attempts: int = 1
+    status: str = "ok"                 # "ok" | "error" | "skipped"
+    error: Optional[str] = None
+    schema_version: int = SCHEMA_VERSION
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def flat(self) -> dict:
+        """Single-level dict for CSV/result tables: point + metrics merged,
+        prefixed by the bookkeeping columns."""
+        out = {"schema_version": self.schema_version,
+               "workload": self.workload}
+        out.update(self.point)
+        out.update(self.metrics)
+        out.update(power_source=self.power_source, n_devices=self.n_devices,
+                   attempts=self.attempts, status=self.status)
+        if self.error:
+            out["error"] = self.error
+        return out
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ResultRecord":
+        d = dict(d)
+        version = d.get("schema_version", 0)
+        if version > SCHEMA_VERSION or version < 1:
+            raise ValueError(
+                f"ResultRecord schema_version {version} not supported "
+                f"(this reader understands <= {SCHEMA_VERSION})")
+        return cls(**d)
+
+
+def save_records(records: list, out_dir, name: str = "results") -> None:
+    """Write the schema-versioned JSON + flat CSV pair (atomically)."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    workload = records[0].workload if records else ""
+    doc = {"schema_version": SCHEMA_VERSION, "workload": workload,
+           "records": [r.to_dict() for r in records]}
+    atomic_write_text(out / f"{name}.json",
+                      json.dumps(doc, indent=1, default=str))
+    atomic_write_text(out / f"{name}.csv",
+                      Frame.from_records([r.flat() for r in records]).to_csv())
+
+
+def load_records(path) -> list:
+    """Read a results.json back into ResultRecords (version-checked)."""
+    doc = json.loads(pathlib.Path(path).read_text())
+    if isinstance(doc, list):   # pre-schema layout (plain record list)
+        raise ValueError(f"{path}: unversioned legacy results; re-run the "
+                         f"benchmark through `python -m repro.bench run`")
+    return [ResultRecord.from_dict(d) for d in doc.get("records", [])]

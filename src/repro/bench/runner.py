@@ -1,0 +1,127 @@
+"""WorkloadRunner — executes one WorkloadSpec end to end.
+
+Extends the core suite runner machinery (`repro.core.runner.run_attempts`)
+to the declarative WorkloadSpec contract: expand the point space (smoke
+preset / ``--points`` overrides applied), select the power backend once
+(RAPL -> TPU-model -> synthetic, labeled), call ``spec.build`` per point,
+run each returned step thunk with retries and straggler detection, and
+persist normalized ``ResultRecord``s incrementally + a manifest.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import Optional, Sequence
+
+from repro.bench.context import RunContext
+from repro.bench.records import ResultRecord, save_records
+from repro.bench.spec import WorkloadSpec
+from repro.core.manifest import write_manifest
+from repro.core.results import table
+from repro.core.runner import StragglerWatchdog, run_attempts
+from repro.power.methods import PowerMethod, select_power_methods
+
+
+class DeviceCountError(RuntimeError):
+    """The workload needs more jax devices than this process has."""
+
+    def __init__(self, spec: WorkloadSpec, have: int):
+        super().__init__(
+            f"workload {spec.name!r} needs {spec.n_devices} devices, "
+            f"process has {have}; run via `python -m repro.bench run` "
+            f"(which forces a host platform device count) or set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{spec.n_devices}")
+        self.spec = spec
+        self.have = have
+
+
+class WorkloadRunner:
+    def __init__(self, spec: WorkloadSpec, *,
+                 out_dir: str = "artifacts/bench",
+                 power: str = "auto",
+                 power_methods: Optional[Sequence[PowerMethod]] = None,
+                 power_source: Optional[str] = None,
+                 warmup: int = 1, iters: int = 3,
+                 smoke: bool = False,
+                 point_overrides: Optional[dict] = None,
+                 retries: int = 1,
+                 power_interval_ms: float = 20.0):
+        self.spec = spec
+        self.out = pathlib.Path(out_dir) / spec.name
+        if power_methods is not None:
+            self.power_methods = list(power_methods)
+            self.power_source = power_source or (
+                self.power_methods[0].name if self.power_methods else "none")
+        else:
+            self.power_methods, self.power_source = select_power_methods(
+                power, n_devices=spec.n_devices)
+        self.warmup = warmup
+        self.iters = iters
+        self.smoke = smoke
+        self.point_overrides = point_overrides
+        self.retries = retries
+        self.power_interval_ms = power_interval_ms
+        self.watchdog = StragglerWatchdog()
+        self.records: list[ResultRecord] = []
+
+    def _check_devices(self) -> None:
+        import jax
+        have = jax.device_count()
+        if have < self.spec.n_devices:
+            raise DeviceCountError(self.spec, have)
+
+    def run(self, verbose: bool = True) -> list[ResultRecord]:
+        spec = self.spec
+        self._check_devices()
+        self.out.mkdir(parents=True, exist_ok=True)
+        write_manifest(self.out, {
+            "workload": spec.name, "analog": spec.analog,
+            "n_devices": spec.n_devices, "tags": sorted(spec.tags),
+            "power_source": self.power_source, "smoke": self.smoke,
+        })
+        ctx = RunContext(out_dir=self.out,
+                         power_methods=self.power_methods,
+                         power_source=self.power_source,
+                         power_interval_ms=self.power_interval_ms,
+                         warmup=self.warmup, iters=self.iters,
+                         smoke=self.smoke)
+        points = spec.space_for(self.smoke, self.point_overrides).expand()
+        for i, pt in enumerate(points):
+            rec = self._run_point(pt, ctx)
+            self.records.append(rec)
+            if verbose:
+                print(f"[{spec.name}] {i + 1}/{len(points)} {rec.flat()}",
+                      flush=True)
+            save_records(self.records, self.out)
+        return self.records
+
+    def _run_point(self, pt: dict, ctx: RunContext) -> ResultRecord:
+        spec = self.spec
+        rec = ResultRecord(workload=spec.name, point=dict(pt),
+                           power_source=self.power_source,
+                           n_devices=spec.n_devices)
+        t0 = time.perf_counter()
+        ok, step_fns, attempts = run_attempts(
+            "build", lambda: spec.build(pt, ctx), self.retries,
+            log_prefix=f"[{spec.name}] ")
+        rec.attempts = attempts
+        if not ok:
+            rec.status, rec.error = "error", step_fns["build_error"]
+            return rec
+        for name, fn in step_fns.items():
+            ok, metrics, attempts = run_attempts(
+                name, fn, self.retries, log_prefix=f"[{spec.name}] ")
+            rec.attempts = max(rec.attempts, attempts)
+            if not ok:
+                rec.status, rec.error = "error", metrics[f"{name}_error"]
+                break
+            rec.metrics.update(metrics or {})
+        dt = time.perf_counter() - t0
+        if self.watchdog.observe(len(self.records), dt):
+            rec.metrics["straggler"] = True
+        return rec
+
+    def result_table(self) -> str:
+        flat = [r.flat() for r in self.records]
+        return table(flat, self.spec.result_columns)

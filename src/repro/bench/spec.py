@@ -1,0 +1,135 @@
+"""WorkloadSpec — the benchmark-facing declarative API.
+
+A workload is one paper table/figure: a name, its paper analog, a
+parameter ``Space``, the device count it needs, selection tags, and a
+``build(point, ctx) -> {step_name: thunk}`` factory. Registration via the
+``@workload`` decorator puts it in the global registry that the single
+CLI (``python -m repro.bench``) and ``WorkloadRunner`` drive — the suite
+half of CARAML's "compact, automated, extensible, reproducible" claim.
+
+``build`` is called once per expanded point with a ``RunContext`` and
+returns an ordered mapping of named zero-arg step thunks, each producing
+a metrics dict. Cross-point state (configs, params, jitted programs)
+lives in ``ctx.memo`` so sweeps compile once; timing/energy plumbing is
+``ctx.measure`` — owned by the runner, not the workload.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Optional
+
+from repro.core.params import Space
+
+# step thunk: () -> metrics dict;  build: (point, ctx) -> {name: thunk}
+StepFns = Dict[str, Callable[[], dict]]
+BuildFn = Callable[[dict, "object"], StepFns]
+
+#: tags with agreed meaning; workloads may add their own on top.
+KNOWN_TAGS = ("smoke", "full", "train", "serve", "vision", "kernels",
+              "analysis")
+
+
+class UnknownWorkloadError(KeyError):
+    """Raised when a suite name is not in the registry."""
+
+    def __init__(self, name: str, known: Iterable[str]):
+        super().__init__(name)
+        self.name = name
+        self.known = sorted(known)
+
+    def __str__(self) -> str:
+        return (f"unknown workload {self.name!r}; registered: "
+                f"{', '.join(self.known) or '(none)'}")
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Declarative description of one benchmark workload."""
+
+    name: str
+    analog: str                       # the paper table/figure it reproduces
+    space: Space                      # full-run parameter space
+    build: BuildFn
+    n_devices: int = 1                # jax devices the workload requires
+    tags: frozenset = frozenset()
+    smoke_axes: Optional[dict] = None  # axis overrides for smoke runs
+    result_columns: Optional[list] = None
+    primary_metric: Optional[str] = None  # headline column for emit lines
+    heatmap_keys: Optional[tuple] = None  # (row, col, val) -> render heatmap
+    description: str = ""
+
+    def space_for(self, smoke: bool = False,
+                  overrides: Optional[dict] = None) -> Space:
+        """The parameter space to run: full axes, narrowed by the smoke
+        preset and/or explicit ``--points`` overrides (constraints kept)."""
+        axes = dict(self.space.axes)
+        if smoke and self.smoke_axes:
+            axes.update(self.smoke_axes)
+        for k, v in (overrides or {}).items():
+            if k not in axes:
+                raise KeyError(f"workload {self.name!r} has no axis {k!r}; "
+                               f"axes: {sorted(axes)}")
+            axes[k] = list(v) if isinstance(v, (list, tuple)) else [v]
+        return Space(axes, list(self.space.constraints))
+
+    def matches(self, tags: Optional[Iterable[str]]) -> bool:
+        """OR-selection: any requested tag present selects the workload."""
+        if not tags:
+            return True
+        return bool(self.tags & set(tags))
+
+
+_REGISTRY: dict[str, WorkloadSpec] = {}
+
+
+def register(spec: WorkloadSpec) -> WorkloadSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"workload {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def workload(name: str, *, analog: str, space: Space, n_devices: int = 1,
+             tags: Iterable[str] = (), smoke: Optional[dict] = None,
+             result_columns: Optional[list] = None,
+             primary_metric: Optional[str] = None,
+             heatmap_keys: Optional[tuple] = None):
+    """Decorator: register ``build(point, ctx)`` as a WorkloadSpec."""
+
+    def deco(build: BuildFn) -> WorkloadSpec:
+        return register(WorkloadSpec(
+            name=name, analog=analog, space=space, build=build,
+            n_devices=n_devices, tags=frozenset(tags), smoke_axes=smoke,
+            result_columns=result_columns, primary_metric=primary_metric,
+            heatmap_keys=heatmap_keys,
+            description=(build.__doc__ or "").strip().splitlines()[0]
+            if build.__doc__ else ""))
+
+    return deco
+
+
+def get_workload(name: str) -> WorkloadSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownWorkloadError(name, _REGISTRY) from None
+
+
+def workload_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def iter_workloads(names: Optional[Iterable[str]] = None,
+                   tags: Optional[Iterable[str]] = None,
+                   ) -> list[WorkloadSpec]:
+    """Select workloads by explicit names and/or tags (names validate)."""
+    if names:
+        specs = [get_workload(n) for n in names]
+    else:
+        specs = [_REGISTRY[n] for n in sorted(_REGISTRY)]
+    return [s for s in specs if s.matches(tags)]
+
+
+def unregister(name: str) -> None:
+    """Testing hook: remove a workload (no-op if absent)."""
+    _REGISTRY.pop(name, None)

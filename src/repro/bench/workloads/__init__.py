@@ -1,0 +1,16 @@
+"""The seven paper workloads, registered on import.
+
+Importing this package populates the WorkloadSpec registry; the modules
+must stay side-effect-free beyond registration (no jax device access at
+import time) so the CLI can configure the host platform device count
+before the backend initializes.
+"""
+from repro.bench.workloads import (  # noqa: F401 - registration imports
+    heatmap,
+    kernels,
+    llm_train,
+    pipeline_gpt,
+    resnet50,
+    roofline,
+    serve,
+)

@@ -1,0 +1,83 @@
+"""Paper Fig. 4 analog: throughput heatmap over (data-parallel degree x
+global batch size), with infeasible cells excluded by constraints (the
+report renders them as OOM, like the paper's figure).
+
+This is the ablation-automation CARAML's JUBE layer provides: the Space
+constraints encode the paper's "global batch not divisible by
+micro_batch x dp" exclusion. The CLI forces a >=8-device host platform
+before the backend initializes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.bench.spec import workload
+from repro.configs import get_config
+from repro.core.metrics import tokens_per_s
+from repro.core.params import Space, divisible_batch
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.train.optimizer import OptConfig, opt_init
+from repro.train.step import StepConfig, make_train_step
+
+SEQ = 64
+
+
+def _setup():
+    c = get_config("gpt-117m").reduced(n_layers=2, d_model=128, d_ff=256,
+                                       n_heads=4, n_kv_heads=4, d_head=32,
+                                       vocab=2048)
+    oc = OptConfig(warmup=1, total_steps=100)
+    params = lm.init(jax.random.key(0), c)
+    opt_state = opt_init(oc, params)
+    return c, oc, params, opt_state
+
+
+def _dp_step(ctx, dp: int):
+    def make():
+        c, oc, _, _ = ctx.memo("heatmap", _setup)
+        mesh = make_mesh((dp,), ("data",))
+        bsh = NamedSharding(mesh, P("data"))
+        return jax.jit(make_train_step(c, oc, StepConfig())), bsh
+
+    return ctx.memo(("heatmap_dp", dp), make)
+
+
+@workload(
+    "heatmap",
+    analog="Fig. 4 (dp x global-batch throughput heatmap)",
+    space=Space({"dp": [1, 2, 4, 8], "global_batch": [8, 16, 32],
+                 "micro_batch": [1]},
+                [divisible_batch,
+                 lambda pt: pt["global_batch"] >= pt["dp"]]),
+    smoke={"dp": [1, 2], "global_batch": [8]},
+    n_devices=8,
+    tags=("train", "smoke", "full"),
+    result_columns=["dp", "global_batch", "tokens_per_s", "ms",
+                    "power_source"],
+    primary_metric="tokens_per_s",
+    heatmap_keys=("dp", "global_batch", "tokens_per_s"),
+)
+def build(pt, ctx):
+    """dp x batch train-step sweep (paper Fig. 4)."""
+    c, oc, params, opt_state = ctx.memo("heatmap", _setup)
+    step, bsh = _dp_step(ctx, pt["dp"])
+    gb = pt["global_batch"]
+    toks = jax.device_put(
+        jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ]), bsh)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+    def run():
+        def one():
+            p, o, m = step(params, opt_state, batch)
+            return p
+
+        m = ctx.measure(one)
+        return {"tokens_per_s": tokens_per_s(gb, SEQ, m.seconds),
+                "ms": m.ms, "seconds": m.seconds,
+                "energy_wh": m.energy_wh}
+
+    return {"run": run}

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs XLA reference.
+
+Interpret mode executes the kernel body in Python — the timing column is
+a correctness-scale signal only; the real figure of merit on TPU is the
+roofline delta (flash attention removes the O(S*T) score traffic from
+the memory term). Power measurement is off: microsecond kernels are far
+below the power sampling interval.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.spec import workload
+from repro.core.params import Space
+from repro.kernels import ops
+
+FLASH_SHAPES = {
+    # case -> (batch, seq, heads, kv_heads, d_head)
+    "flash_b1_s256": (1, 256, 4, 2, 64),
+    "flash_b2_s512": (2, 512, 8, 8, 64),
+}
+
+
+def _flash_inputs(case: str):
+    b, s, h, kh, dh = FLASH_SHAPES[case]
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, dh), jnp.float32)
+    return q, k, v
+
+
+@workload(
+    "kernels",
+    analog="Pallas kernel microbench (flash attention, rmsnorm)",
+    space=Space({"case": ["flash_b1_s256", "flash_b2_s512", "rmsnorm"],
+                 "impl": ["xla", "pallas"]}),
+    smoke={"case": ["flash_b1_s256", "rmsnorm"]},
+    tags=("kernels", "smoke", "full"),
+    result_columns=["case", "impl", "us", "interpret"],
+    primary_metric="us",
+)
+def build(pt, ctx):
+    """Pallas-vs-XLA kernel timing sweep."""
+    case, impl = pt["case"], pt["impl"]
+    interpret = impl == "pallas"   # no compiled Pallas backend on CPU
+    if case == "rmsnorm":
+        x, sc = ctx.memo("kernels_rmsnorm", lambda: (
+            jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32),
+            jnp.ones((1024,))))
+
+        def fn():
+            return ops.rmsnorm(x, sc, impl=impl, interpret=interpret)
+    else:
+        q, k, v = ctx.memo(("kernels_flash", case),
+                           lambda: _flash_inputs(case))
+
+        def fn():
+            return ops.flash_attention(q, k, v, impl=impl,
+                                       interpret=interpret)
+
+    def run():
+        m = ctx.measure(fn, iters=2 if interpret else 3, power=False)
+        return {"us": m.us, "seconds": m.seconds,
+                "interpret": int(interpret)}
+
+    return {"run": run}

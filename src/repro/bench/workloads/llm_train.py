@@ -1,0 +1,69 @@
+"""Paper Fig. 2 analog: LLM training throughput + energy vs global batch.
+
+Trains the paper's GPT decoder (reduced for the host under test) across a
+global-batch sweep; reports tokens/s, energy/step, tokens/Wh — CARAML's
+LLM figures of merit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.spec import workload
+from repro.configs import get_config
+from repro.core.metrics import tokens_per_s
+from repro.core.params import Space
+from repro.data.synthetic import synthetic_tokens
+from repro.models import lm
+from repro.train.optimizer import OptConfig, opt_init
+from repro.train.step import StepConfig, make_train_step
+
+
+def _setup(arch: str):
+    c = get_config(arch).reduced(d_model=128, n_layers=4, d_ff=512,
+                                 vocab=8192, n_heads=4, n_kv_heads=4,
+                                 d_head=32)
+    oc = OptConfig(warmup=2, total_steps=1000)
+    params = lm.init(jax.random.key(0), c)
+    opt_state = opt_init(oc, params)
+    step = jax.jit(make_train_step(c, oc, StepConfig(microbatches=4)))
+    return c, params, opt_state, step
+
+
+@workload(
+    "llm_train",
+    analog="Fig. 2 (LLM tokens/s + energy vs global batch)",
+    space=Space({"arch": ["gpt-800m"], "global_batch": [16, 32, 64],
+                 "seq": [128]}),
+    smoke={"global_batch": [8], "seq": [64]},
+    tags=("train", "smoke", "full"),
+    result_columns=["arch", "global_batch", "seq", "tokens_per_s",
+                    "ms_per_step", "energy_wh_per_step", "tokens_per_wh",
+                    "power_source"],
+    primary_metric="tokens_per_s",
+)
+def build(pt, ctx):
+    """LLM train-step sweep over global batch size."""
+    c, params, opt_state, step = ctx.memo(
+        ("llm_train", pt["arch"]), lambda: _setup(pt["arch"]))
+    gb, seq = pt["global_batch"], pt["seq"]
+    toks = jnp.asarray(synthetic_tokens(gb, seq, c.vocab)[:, :seq])
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    def train():
+        p, o = params, opt_state
+
+        def one():
+            nonlocal p, o
+            p, o, m = step(p, o, batch)
+            return m["loss"]
+
+        m = ctx.measure(one)
+        tps = tokens_per_s(gb, seq, m.seconds)
+        return {"tokens_per_s": tps, "ms_per_step": m.ms,
+                "seconds": m.seconds,
+                "energy_wh_per_step": m.energy_wh,
+                "tokens_per_wh": (gb * seq / m.energy_wh)
+                if m.energy_wh > 0 else 0.0}
+
+    return {"train": train}

@@ -1,0 +1,114 @@
+"""Paper Table II analog: GPT-117M trained with PIPELINE parallelism.
+
+The Graphcore case: the model's layers split over 4 devices (pipeline
+parallelism was the only way it fit in per-tile SRAM), throughput in
+tokens/s across a batch sweep, plus the pipeline-bubble overhead. The
+CLI forces a >=4-device host platform before the backend initializes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.spec import workload
+from repro.configs import get_config
+from repro.core.metrics import tokens_per_s
+from repro.core.params import Space
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.models.common import apply_mlp, apply_norm
+from repro.parallel.pipeline import (
+    bubble_fraction, pipeline_forward, stage_params_split,
+)
+
+SEQ = 64
+N_STAGES = 4
+N_MICROBATCH = 8
+
+
+def _layer_fn(c):
+    def layer_fn(stage_p, x):
+        # apply this stage's layers sequentially
+        def body(x, lp):
+            from repro.models import attention as attn
+            sp = lp["slot0"]
+            h = apply_norm(c, sp["norm1"], x)
+            h = attn.self_attention(c, sp["attn"], h, causal=True)
+            x = x + h
+            x = x + apply_mlp(c, sp["mlp"], apply_norm(c, sp["norm2"], x))
+            return x, None
+        x, _ = jax.lax.scan(body, x, stage_p)
+        return x
+    return layer_fn
+
+
+def _setup():
+    c = get_config("gpt-117m").reduced(n_layers=8, d_model=128, d_ff=512,
+                                       n_heads=4, n_kv_heads=4, d_head=32,
+                                       vocab=4096)
+    mesh = make_mesh((N_STAGES,), ("stage",))
+    params = lm.init(jax.random.key(0), c)
+    stage_params = stage_params_split(params["layers"], N_STAGES)
+    layer_fn = _layer_fn(c)
+    fwd = jax.jit(lambda sp, xs: pipeline_forward(
+        mesh, "stage", layer_fn, sp, xs))
+    return c, params, stage_params, fwd
+
+
+def verify_pipeline_correctness():
+    """Pipeline output == sequential execution of the same layers."""
+    import numpy as np
+    c = get_config("gpt-117m").reduced(n_layers=4, d_model=64, d_ff=128,
+                                       n_heads=2, n_kv_heads=2, d_head=32,
+                                       vocab=512)
+    mesh = make_mesh((N_STAGES,), ("stage",))
+    params = lm.init(jax.random.key(0), c)
+    stage_params = stage_params_split(params["layers"], N_STAGES)
+    layer_fn = _layer_fn(c)
+    toks = jnp.asarray(synthetic_tokens(8, 32, c.vocab)[:, :32])
+    x = lm._inputs_to_embeds(c, params, toks, None)
+    x_mb = x.reshape(4, 2, 32, c.d_model)
+    got = pipeline_forward(mesh, "stage", layer_fn, stage_params, x_mb)
+    want = layer_fn(jax.tree.map(
+        lambda a: a.reshape(-1, *a.shape[2:]), stage_params), x)
+    np.testing.assert_allclose(
+        np.asarray(got.reshape(x.shape), np.float32),
+        np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)
+    return {"pipeline_matches_sequential": 1}
+
+
+@workload(
+    "pipeline_gpt",
+    analog="Table II (pipeline-parallel GPT-117M tokens/s)",
+    space=Space({"global_batch": [16, 32, 64]}),
+    smoke={"global_batch": [16]},
+    n_devices=N_STAGES,
+    tags=("train", "smoke", "full"),
+    result_columns=["global_batch", "tokens_per_s", "ms_per_iter",
+                    "energy_wh", "tokens_per_wh", "bubble_fraction",
+                    "power_source"],
+    primary_metric="tokens_per_s",
+)
+def build(pt, ctx):
+    """Pipeline-parallel forward sweep over global batch size."""
+    c, params, stage_params, fwd = ctx.memo("pipeline_gpt", _setup)
+    gb = pt["global_batch"]
+    mb = gb // N_MICROBATCH
+    toks = jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ])
+    x = lm._inputs_to_embeds(c, params, toks, None)
+    x_mb = x.reshape(N_MICROBATCH, mb, SEQ, c.d_model)
+
+    def run():
+        m = ctx.measure(fwd, stage_params, x_mb)
+        return {"tokens_per_s": tokens_per_s(gb, SEQ, m.seconds),
+                "ms_per_iter": m.ms, "seconds": m.seconds,
+                "energy_wh": m.energy_wh,
+                "tokens_per_wh": (gb * SEQ / m.energy_wh)
+                if m.energy_wh > 0 else 0.0,
+                "bubble_fraction": bubble_fraction(N_STAGES, N_MICROBATCH)}
+
+    steps = {"run": run}
+    if not ctx.smoke:   # correctness gate rides along on full runs only
+        steps = {"verify": verify_pipeline_correctness, "run": run}
+    return steps

@@ -1,0 +1,62 @@
+"""Paper Fig. 3 / Table III analog: ResNet50 training throughput + energy.
+
+images/s and images/Wh across a batch sweep (single device), using the
+data-parallel train step (the Horovod-analog path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.spec import workload
+from repro.configs.resnet50 import CONFIG
+from repro.core.metrics import images_per_s
+from repro.core.params import Space
+from repro.data.synthetic import synthetic_images
+from repro.models import resnet
+from repro.train.optimizer import OptConfig, opt_init
+from repro.train.step import make_resnet_train_step
+
+
+def _setup():
+    c = CONFIG.reduced(img_size=64, width=16)
+    oc = OptConfig(warmup=2, total_steps=1000)
+    params = resnet.init(jax.random.key(0), c)
+    opt_state = opt_init(oc, params)
+    step = jax.jit(make_resnet_train_step(c, oc))
+    return c, params, opt_state, step
+
+
+@workload(
+    "resnet50",
+    analog="Fig. 3 / Table III (ResNet50 images/s + energy)",
+    space=Space({"global_batch": [16, 32, 64]}),
+    smoke={"global_batch": [8]},
+    tags=("vision", "train", "smoke", "full"),
+    result_columns=["global_batch", "images_per_s", "ms_per_step",
+                    "energy_wh_per_step", "images_per_wh", "power_source"],
+    primary_metric="images_per_s",
+)
+def build(pt, ctx):
+    """ResNet50 train-step sweep over global batch size."""
+    c, params, opt_state, step = ctx.memo("resnet50", _setup)
+    gb = pt["global_batch"]
+    imgs, labels = synthetic_images(gb, c.img_size, c.n_classes)
+    batch = {"images": jnp.asarray(imgs), "labels": jnp.asarray(labels)}
+
+    def train():
+        p, o = params, opt_state
+
+        def one():
+            nonlocal p, o
+            p, o, m = step(p, o, batch)
+            return m["loss"]
+
+        m = ctx.measure(one)
+        return {"images_per_s": images_per_s(gb, m.seconds),
+                "ms_per_step": m.ms, "seconds": m.seconds,
+                "energy_wh_per_step": m.energy_wh,
+                "images_per_wh": (gb / m.energy_wh)
+                if m.energy_wh > 0 else 0.0}
+
+    return {"train": train}

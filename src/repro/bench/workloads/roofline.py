@@ -1,0 +1,80 @@
+"""Roofline table workload: render the dry-run roofline artifacts.
+
+Reads the per-arch dry-run artifacts (``artifacts/dryrun/``), summarizes
+the roofline occupancy per mesh, and writes the full row table next to
+the workload's results. Analysis-only: no model execution, no power —
+an absent artifacts directory yields an empty-but-green record so smoke
+runs pass on fresh checkouts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+from repro.bench.spec import workload
+from repro.core.params import Space
+from repro.core.results import save_results, table
+
+
+def _dryrun_dir() -> pathlib.Path:
+    override = os.environ.get("REPRO_DRYRUN_DIR")
+    if override:
+        return pathlib.Path(override)
+    # anchored to the repo root, not the cwd, so `run --suite roofline`
+    # finds the artifacts no matter where it is invoked from
+    repo_root = pathlib.Path(__file__).resolve().parents[4]
+    return repo_root / "artifacts" / "dryrun"
+
+
+def load_rows(mesh: str) -> list[dict]:
+    rows = []
+    for f in sorted(_dryrun_dir().glob(f"{mesh}__*.json")):
+        r = json.loads(f.read_text())
+        if "roofline" not in r:
+            if "skipped" in r:
+                rows.append({"arch": r["arch"], "shape": r["shape"],
+                             "bottleneck": "SKIP",
+                             "note": r["skipped"]})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "roofline_frac": rf["roofline_fraction"],
+            "useful_flops": rf["useful_flops_ratio"],
+            "hbm_gib": r.get("bytes_per_device_tpu",
+                             r.get("bytes_per_device", 0)) / 2**30,
+            "fits": r.get("fits_hbm_16g"),
+        })
+    return rows
+
+
+@workload(
+    "roofline",
+    analog="par.Roofline table (per-device seconds/step, from dry-run)",
+    space=Space({"mesh": ["single", "multi"]}),
+    tags=("analysis", "smoke", "full"),
+    result_columns=["mesh", "n_rows", "n_compute_bound", "n_memory_bound",
+                    "n_skipped"],
+    primary_metric="n_rows",
+)
+def build(pt, ctx):
+    """Summarize dry-run roofline artifacts for one mesh size."""
+    mesh = pt["mesh"]
+
+    def run():
+        rows = load_rows(mesh)
+        if rows:
+            print(f"\n== {mesh}-pod roofline (per-device seconds/step) ==")
+            print(table(rows, floatfmt="{:.4f}"))
+            save_results(rows, ctx.out_dir, f"roofline_{mesh}")
+        by = [r.get("bottleneck") for r in rows]
+        return {"n_rows": len(rows),
+                "n_compute_bound": by.count("compute"),
+                "n_memory_bound": by.count("memory"),
+                "n_skipped": by.count("SKIP")}
+
+    return {"run": run}

@@ -2,7 +2,9 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import tempfile
 from typing import Any, Iterable, Optional
 
 from repro.power.frame import Frame
@@ -50,8 +52,31 @@ def heatmap(records: list[dict], row_key: str, col_key: str, val_key: str,
     return "\n".join(out) + "\n"
 
 
+def atomic_write_text(path, text: str):
+    """Write ``text`` to ``path`` via tmp file + ``os.replace``.
+
+    ``save_results`` is called after every benchmark point; a plain
+    ``write_text`` interrupted mid-write (ctrl-C, OOM kill) truncates the
+    results of every point that already completed. ``os.replace`` is
+    atomic on POSIX, so readers see either the old or the new file.
+    """
+    path = pathlib.Path(path)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=f".{path.name}.")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_results(records: list[dict], out_dir, name: str):
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
-    (out / f"{name}.json").write_text(json.dumps(records, indent=1, default=str))
-    Frame.from_records(records).to_csv(out / f"{name}.csv")
+    atomic_write_text(out / f"{name}.json",
+                      json.dumps(records, indent=1, default=str))
+    atomic_write_text(out / f"{name}.csv", Frame.from_records(records).to_csv())

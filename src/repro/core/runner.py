@@ -4,10 +4,14 @@ retries, straggler detection, and incremental result persistence.
 This is the JUBE runtime analog: it expands the parameter space, runs each
 (point x step), wraps execution in the jpwr-style get_power context, and
 renders the final result table.
+
+``repro.bench.runner.WorkloadRunner`` builds on the same retry machinery
+(`run_attempts`) to execute declarative ``WorkloadSpec`` workloads.
 """
 from __future__ import annotations
 
 import json
+import logging
 import pathlib
 import time
 import traceback
@@ -20,6 +24,8 @@ from repro.core.suite import BenchmarkSuite, Step
 from repro.power.ctxmgr import get_power
 from repro.power.methods import PowerMethod
 
+logger = logging.getLogger("repro.bench")
+
 
 @dataclass
 class StragglerWatchdog:
@@ -28,6 +34,10 @@ class StragglerWatchdog:
     At cluster scale this drives the mitigation policy (skip shard /
     checkpoint-and-rebalance); here it records events for the report and
     is unit-tested with simulated stragglers.
+
+    Warmup samples seed both the mean AND the variance: judging the first
+    post-warmup step against a zero-variance baseline would flag ordinary
+    jitter whenever the warmup steps happened to disagree.
     """
     k: float = 3.0
     alpha: float = 0.2
@@ -36,12 +46,19 @@ class StragglerWatchdog:
     var: float = 0.0
     n: int = 0
     events: list = field(default_factory=list)
+    _warmup_m2: float = 0.0     # Welford sum of squared deviations
 
     def observe(self, step_idx: int, dt: float) -> bool:
         self.n += 1
         if self.n <= self.warmup:
-            self.mean = dt if self.n == 1 else (
-                self.mean + (dt - self.mean) / self.n)
+            if self.n == 1:
+                self.mean = dt
+            else:
+                delta = dt - self.mean
+                self.mean += delta / self.n
+                self._warmup_m2 += delta * (dt - self.mean)
+                # sample variance of the warmup window so far
+                self.var = self._warmup_m2 / (self.n - 1)
             return False
         straggler = dt > self.mean + self.k * max(self.var ** 0.5,
                                                   0.05 * self.mean)
@@ -52,6 +69,32 @@ class StragglerWatchdog:
             self.events.append({"step": step_idx, "dt": dt,
                                 "mean": self.mean})
         return straggler
+
+
+def run_attempts(name: str, fn: Callable[[], dict], retries: int,
+                 *, log_prefix: str = ""):
+    """Run ``fn`` up to ``retries`` times.
+
+    Returns ``(ok, metrics, attempts)``. Every failed attempt is logged
+    (message + traceback at debug level) so transient errors that a retry
+    papers over still leave a trace; on exhaustion the last exception is
+    summarized in the returned metrics.
+    """
+    last_err: Optional[BaseException] = None
+    retries = max(retries, 1)
+    for attempt in range(1, retries + 1):
+        try:
+            return True, fn(), attempt
+        except Exception as e:  # noqa: BLE001 - benchmark must continue
+            last_err = e
+            logger.warning("%sstep %r attempt %d/%d failed: %s: %s",
+                           log_prefix, name, attempt, retries,
+                           type(e).__name__, e)
+            logger.debug("%sstep %r attempt %d traceback:\n%s",
+                         log_prefix, name, attempt,
+                         traceback.format_exc())
+    return False, {f"{name}_error":
+                   f"{type(last_err).__name__}: {last_err}"}, retries
 
 
 class Runner:
@@ -87,23 +130,23 @@ class Runner:
         return self.records
 
     def _run_step(self, step: Step, pt: dict, context: dict):
-        last_err = None
-        for attempt in range(step.retries):
-            try:
-                if self.power_methods:
-                    with get_power(self.power_methods,
-                                   self.power_interval_ms) as scope:
-                        metrics = step.fn(pt, context)
-                    edf, _ = scope.energy()
-                    metrics[f"{step.name}_energy_wh"] = float(
-                        sum(edf.col("energy_wh")))
-                else:
+        def attempt():
+            if self.power_methods:
+                with get_power(self.power_methods,
+                               self.power_interval_ms) as scope:
                     metrics = step.fn(pt, context)
-                return True, metrics
-            except Exception as e:  # noqa: BLE001 - benchmark must continue
-                last_err = e
-        return False, {f"{step.name}_error":
-                       f"{type(last_err).__name__}: {last_err}"}
+                edf, _ = scope.energy()
+                metrics[f"{step.name}_energy_wh"] = float(
+                    sum(edf.col("energy_wh")))
+            else:
+                metrics = step.fn(pt, context)
+            return metrics
+
+        ok, metrics, attempts = run_attempts(
+            step.name, attempt, step.retries,
+            log_prefix=f"[{self.suite.name}] ")
+        metrics[f"{step.name}_attempts"] = attempts
+        return ok, metrics
 
     def result_table(self) -> str:
         return table(self.records, self.suite.result_columns)

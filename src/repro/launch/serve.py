@@ -15,22 +15,13 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import synthetic_tokens
 from repro.models import lm
-from repro.power.methods import RaplPower, TPUModelPower
+from repro.power.methods import select_power_methods
 from repro.serve.engine import BatchedServer, ServeEngine
-from repro.serve.requests import Request
-
-
-def _power_methods():
-    rapl = RaplPower()
-    if rapl.available():
-        return [rapl], "rapl"
-    return [TPUModelPower(n_devices=1, utilization_fn=lambda: 1.0)], \
-        "tpu_model"
+from repro.serve.requests import poisson_requests
 
 
 def _run_batch(args, c, params):
@@ -54,21 +45,14 @@ def _run_batch(args, c, params):
 
 
 def _run_scheduled(args, c, params):
-    methods, source = _power_methods()
+    methods, source = select_power_methods("auto")
     max_len = args.prompt_len + args.gen + 1
     engine = ServeEngine(c, params, n_slots=args.slots, max_len=max_len,
                          power_methods=methods)
-    rng = np.random.default_rng(args.seed)
-    prompts = synthetic_tokens(args.requests, args.prompt_len, c.vocab,
-                               args.seed)[:, :args.prompt_len]
-    gaps = rng.exponential(1.0 / args.rate, size=args.requests)
-    arrivals = np.cumsum(gaps) - gaps[0]
-    budgets = rng.integers(max(args.gen // 4, 1), args.gen + 1,
-                           size=args.requests)
-    reqs = [Request(rid=i, prompt=prompts[i],
-                    max_new_tokens=int(budgets[i]),
-                    arrival_s=float(arrivals[i]))
-            for i in range(args.requests)]
+    reqs = poisson_requests(args.requests, args.rate, c.vocab,
+                            prompt_len=args.prompt_len, seed=args.seed,
+                            short=(max(args.gen // 4, 1), args.gen),
+                            long=(max(args.gen // 4, 1), args.gen))
     out = engine.serve(reqs, policy=args.mode)
     s = out.summary
     print(f"[serve] arch={c.name} mode={args.mode} slots={args.slots} "

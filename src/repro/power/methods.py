@@ -143,3 +143,49 @@ METHODS = {"synthetic": SyntheticPower, "rapl": RaplPower,
 
 def get_method(name: str, **kw) -> PowerMethod:
     return METHODS[name](**kw)
+
+
+def select_power_methods(prefer: str = "auto", *, n_devices: int = 1,
+                         utilization_fn: Optional[Callable[[], float]] = None,
+                         ) -> tuple[list[PowerMethod], str]:
+    """Pick the measurement backend for this host: RAPL -> TPU-model ->
+    synthetic, returning ``(methods, source_label)``.
+
+    The label is stamped into every result record as ``power_source`` so a
+    reader can always tell measured counters from modeled or synthetic
+    power. ``prefer`` forces a specific backend (or ``"none"`` to disable
+    measurement); ``"auto"`` walks the preference order:
+
+      rapl       — real powercap counters, when the host exposes them
+      tpu_model  — analytic model, when running on an actual TPU backend
+                   (TPUs expose no user-space counter) or REPRO_TPU is set
+      synthetic  — deterministic waveform everywhere else (CPU CI hosts),
+                   so energy columns stay populated but clearly labeled
+    """
+    if prefer == "none":
+        return [], "none"
+    if prefer not in ("auto", None):
+        if prefer not in METHODS:
+            raise KeyError(f"unknown power method {prefer!r}; "
+                           f"known: {sorted(METHODS)} + ['auto', 'none']")
+        kw: dict = {}
+        if prefer in ("synthetic", "tpu_model"):
+            kw["n_devices"] = n_devices
+        if prefer == "tpu_model":
+            kw["utilization_fn"] = utilization_fn or (lambda: 1.0)
+        return [METHODS[prefer](**kw)], prefer
+    rapl = RaplPower()
+    if rapl.available():
+        return [rapl], "rapl"
+    on_tpu = bool(os.environ.get("REPRO_TPU"))
+    if not on_tpu:
+        try:
+            import jax
+            on_tpu = jax.default_backend() == "tpu"
+        except Exception:  # noqa: BLE001 - no jax, no TPU
+            on_tpu = False
+    if on_tpu:
+        return [TPUModelPower(
+            n_devices=n_devices,
+            utilization_fn=utilization_fn or (lambda: 1.0))], "tpu_model"
+    return [SyntheticPower(n_devices=n_devices)], "synthetic"

@@ -87,3 +87,28 @@ class RequestResult:
     @property
     def tokens_per_wh(self) -> float:
         return self.n_tokens / self.energy_wh if self.energy_wh > 0 else 0.0
+
+
+def poisson_requests(n: int, rate_hz: float, vocab: int, *,
+                     prompt_len: int = 8, seed: int = 0,
+                     short: tuple[int, int] = (2, 8),
+                     long: tuple[int, int] = (64, 88),
+                     p_long: float = 0.25) -> list[Request]:
+    """Seeded synthetic request stream shared by the serve benchmark and
+    the serving CLI: exponential inter-arrival gaps (Poisson process) and
+    a bimodal short/long token-budget mix — the realistic serving load
+    (mostly short answers, a tail of long generations) that iteration-level
+    refill monetizes against a batch-fill barrier.
+    """
+    from repro.data.synthetic import synthetic_tokens
+
+    rng = np.random.default_rng(seed)
+    prompts = synthetic_tokens(n, prompt_len, vocab, seed)[:, :prompt_len]
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]   # first request arrives at t=0
+    is_long = rng.random(n) < p_long
+    budgets = np.where(is_long,
+                       rng.integers(long[0], long[1] + 1, size=n),
+                       rng.integers(short[0], short[1] + 1, size=n))
+    return [Request(rid=i, prompt=prompts[i], max_new_tokens=int(budgets[i]),
+                    arrival_s=float(arrivals[i])) for i in range(n)]
