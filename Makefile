@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all ci bench bench-smoke bench-serve bench-list
+.PHONY: test test-all ci bench bench-smoke bench-serve bench-list \
+        bench-compare bench-promote
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,3 +26,21 @@ bench-serve:
 
 bench-list:
 	$(PY) -m repro.bench list
+
+BASELINES ?= artifacts/bench/baselines
+
+# the run dir is cleared first: `run` only overwrites per-workload dirs
+# it executes, so a stale results.json from a removed/renamed workload
+# would otherwise be compared (or promoted!) as if current
+bench-compare:   ## fresh smoke run gated against the committed baselines
+	rm -rf artifacts/ci-bench
+	$(PY) -m repro.bench run --tags smoke --power synthetic \
+	    --out artifacts/ci-bench
+	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench \
+	    --fail-on-regression --fail-on-missing
+
+bench-promote:   ## refresh the committed baselines from a fresh smoke run
+	rm -rf artifacts/ci-bench
+	$(PY) -m repro.bench run --tags smoke --power synthetic \
+	    --out artifacts/ci-bench
+	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench --promote

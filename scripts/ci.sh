@@ -20,5 +20,17 @@ python -m pytest -x -q
 #    the deterministic synthetic power backend (multi-device workloads
 #    get their forced host platform via the CLI's XLA_FLAGS re-exec).
 python -m repro.bench list
+rm -rf artifacts/ci-bench   # no stale results from earlier local runs
 python -m repro.bench run --tags smoke --power synthetic \
     --out artifacts/ci-bench
+
+# 4. Regression gate: the smoke run just produced must not be slower or
+#    hungrier than the committed baselines beyond tolerance. The base
+#    tolerance is widened here (default=0.6) because shared CI hosts are
+#    noisy — the gate is for order-of-magnitude regressions, not 5%
+#    drift; `make bench-compare` runs the tight default gate locally.
+#    Refresh the store after an intentional perf change with
+#    `make bench-promote` and commit artifacts/bench/baselines/.
+python -m repro.bench compare artifacts/bench/baselines artifacts/ci-bench \
+    --fail-on-regression --fail-on-missing --rel-tol default=0.6 \
+    --report-out artifacts/ci-bench/compare-report.md

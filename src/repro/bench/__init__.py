@@ -13,8 +13,15 @@ executes them with runner-owned power selection, warmup/iters timing,
 retries, and straggler detection, emitting schema-versioned
 :class:`ResultRecord`s under ``artifacts/bench/<workload>/``.
 """
+from repro.bench.compare import (
+    Comparison, MetricDelta, PointComparison, compare_sets,
+    load_result_set, promote,
+)
 from repro.bench.context import Measurement, RunContext
-from repro.bench.records import SCHEMA_VERSION, ResultRecord, save_records
+from repro.bench.records import (
+    COMPARED_METRICS, SCHEMA_VERSION, ResultRecord, compare_metrics,
+    load_records, point_key, save_records,
+)
 from repro.bench.runner import DeviceCountError, WorkloadRunner
 from repro.bench.spec import (
     UnknownWorkloadError, WorkloadSpec, get_workload, iter_workloads,
@@ -22,7 +29,10 @@ from repro.bench.spec import (
 )
 
 __all__ = [
-    "Measurement", "RunContext", "SCHEMA_VERSION", "ResultRecord",
+    "Comparison", "MetricDelta", "PointComparison", "compare_sets",
+    "load_result_set", "promote",
+    "Measurement", "RunContext", "COMPARED_METRICS", "SCHEMA_VERSION",
+    "ResultRecord", "compare_metrics", "load_records", "point_key",
     "save_records", "DeviceCountError", "WorkloadRunner",
     "UnknownWorkloadError", "WorkloadSpec", "get_workload",
     "iter_workloads", "register", "unregister", "workload",

@@ -5,6 +5,10 @@
                             [--power auto|rapl|tpu_model|synthetic|none]
                             [--warmup N] [--iters N] [--out DIR]
   python -m repro.bench report [--suite a,b] [--out DIR]
+  python -m repro.bench compare BASELINE CURRENT [--fail-on-regression]
+                            [--fail-on-missing] [--promote]
+                            [--rel-tol m=0.1,default=0.3] [--report md|csv]
+                            [--report-out FILE] [--suite a,b]
 
 Replaces the old per-benchmark subprocess driver: one process runs every
 selected workload, sharing the jax runtime. Multi-device workloads are
@@ -26,6 +30,10 @@ import sys
 from typing import Optional, Sequence
 
 from repro.bench import workloads  # noqa: F401 - populates the registry
+from repro.bench.compare import (
+    MISSING, NOISE_K, POWER_MISMATCH, compare_sets, load_result_set,
+    promote,
+)
 from repro.bench.records import load_records
 from repro.bench.runner import WorkloadRunner
 from repro.bench.spec import (
@@ -174,7 +182,7 @@ def cmd_report(args) -> int:
     out = pathlib.Path(args.out)
     names = _parse_list(args.suite) or sorted(
         p.parent.name for p in out.glob("*/results.json"))
-    shown = 0
+    shown, bad = 0, 0
     for name in names:
         path = out / name / "results.json"
         if not path.exists():
@@ -184,14 +192,121 @@ def cmd_report(args) -> int:
             spec = get_workload(name)
         except UnknownWorkloadError:
             spec = None
-        records = load_records(path)
+        try:
+            records = load_records(path)
+        except ValueError as e:
+            # schema mismatch or foreign document: a clear diagnosis, not
+            # a KeyError mid-render — and a nonzero exit for scripts
+            print(f"error: {e}", file=sys.stderr)
+            bad += 1
+            continue
         print(f"\n###### {name} ######")
         if spec is not None:
             _render(spec, records)
         else:
             print(table([r.flat() for r in records], floatfmt="{:.4g}"))
         shown += 1
+    if bad:
+        return 2
     return 0 if shown or not names else 1
+
+
+def _parse_tols(s: Optional[str]) -> Optional[dict]:
+    """``metric=0.1,default=0.3`` -> per-metric tolerance overrides."""
+    if not s:
+        return None
+    out = {}
+    for part in s.split(","):
+        if "=" not in part:
+            raise SystemExit(f"--rel-tol: expected metric=float, "
+                             f"got {part!r}")
+        k, v = part.split("=", 1)
+        try:
+            tol = float(v)
+        except ValueError:
+            raise SystemExit(f"--rel-tol: {v!r} is not a float") from None
+        if tol < 0.0:
+            raise SystemExit(f"--rel-tol: {k.strip()}={tol} — tolerances "
+                             f"must be >= 0")
+        out[k.strip()] = tol
+    return out
+
+
+def cmd_compare(args) -> int:
+    try:
+        base = load_result_set(args.baseline)
+        cur = load_result_set(args.current)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    suites = _parse_list(args.suite)
+    if suites:
+        base = [r for r in base if r.workload in suites]
+        cur = [r for r in cur if r.workload in suites]
+    if not cur:
+        # a typo'd run dir must not read as "nothing regressed"; only an
+        # unpromoted *baseline* store may legitimately be empty
+        print(f"error: no results found at {args.current!r} — nothing to "
+              f"compare", file=sys.stderr)
+        return 2
+    if not base:
+        print(f"warning: empty baseline set at {args.baseline!r} "
+              f"(promote one with `compare ... --promote`)",
+              file=sys.stderr)
+    cmp = compare_sets(base, cur, tols=_parse_tols(args.rel_tol),
+                       noise_k=args.noise_k,
+                       baseline_label=str(args.baseline),
+                       current_label=str(args.current))
+    report = (cmp.to_csv() if args.report == "csv"
+              else cmp.to_markdown(all_points=args.all_points))
+    if args.report_out:
+        out_path = pathlib.Path(args.report_out)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(report)
+        print(f"report written to {args.report_out}")
+    print(report)
+    print(cmp.summary())
+    if args.promote:
+        store = pathlib.Path(args.baseline)
+        if store.is_file():
+            print("error: --promote needs a baseline *directory* to "
+                  "write <workload>.json files into", file=sys.stderr)
+            return 2
+        written = promote(cur, store)
+        for p in written:
+            print(f"promoted baseline: {p}")
+        skipped = {r.workload for r in cur} - \
+            {r.workload for r in cur if r.ok}
+        for name in sorted(skipped):
+            print(f"warning: {name!r} NOT promoted (no ok-status "
+                  f"records); its previous baseline, if any, still "
+                  f"stands", file=sys.stderr)
+        # a renamed/removed workload leaves its old baseline behind, which
+        # would fail --fail-on-missing forever; name the file to delete.
+        # (Suppressed under --suite: a filtered run legitimately omits
+        # every other workload's baseline.)
+        if not suites:
+            current_wl = {r.workload for r in cur}
+            for f in sorted(store.glob("*.json")):
+                if f.stem not in current_wl and f.name != "manifest.json":
+                    print(f"warning: baseline {f} has no workload in the "
+                          f"current run — delete it if the workload was "
+                          f"removed or renamed", file=sys.stderr)
+    rc = cmp.exit_code(fail_on_regression=args.fail_on_regression,
+                       fail_on_missing=args.fail_on_missing)
+    if rc:
+        # name only the points the active gate flags actually counted —
+        # an ungated status in a GATE line sends readers chasing the
+        # wrong failure cause
+        gated = []
+        if args.fail_on_regression:
+            gated += cmp.regressions + cmp.by_status(POWER_MISMATCH)
+        if args.fail_on_missing:
+            gated += cmp.by_status(MISSING)
+        for p in gated:
+            print(f"GATE: {p.status}: {p.key}"
+                  + (f" ({p.note})" if p.note else ""), file=sys.stderr)
+    return rc
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -228,9 +343,38 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_rep.add_argument("--suite", help="comma-separated workload names")
     p_rep.add_argument("--out", default="artifacts/bench")
 
+    p_cmp = sub.add_parser(
+        "compare", help="diff two result sets by point key (the JUBE "
+                        "`result --compare` analog)")
+    p_cmp.add_argument("baseline", help="baseline store dir, run dir, or "
+                                        "results.json")
+    p_cmp.add_argument("current", help="run dir or results.json to judge")
+    p_cmp.add_argument("--suite", help="restrict to these workloads")
+    p_cmp.add_argument("--rel-tol",
+                       help="tolerance overrides, metric=0.1,...; the key "
+                            "'default' replaces every base tolerance")
+    p_cmp.add_argument("--noise-k", type=float, default=NOISE_K,
+                       help="multiplier on the recorded step-time spread "
+                            "when widening tolerances (default %(default)s)")
+    p_cmp.add_argument("--fail-on-regression", action="store_true",
+                       help="exit nonzero when any point regressed (or "
+                            "was measured with a different power source)")
+    p_cmp.add_argument("--fail-on-missing", action="store_true",
+                       help="exit nonzero when a baseline point is absent "
+                            "from the current run")
+    p_cmp.add_argument("--promote", action="store_true",
+                       help="write the current records into the baseline "
+                            "store directory (one <workload>.json each)")
+    p_cmp.add_argument("--report", choices=["md", "csv"], default="md")
+    p_cmp.add_argument("--report-out", help="also write the report here")
+    p_cmp.add_argument("--all-points", action="store_true",
+                       help="include unchanged points in the md report")
+
     args = ap.parse_args(argv)
     if args.cmd == "list":
         return cmd_list(args)
     if args.cmd == "run":
         return cmd_run(args, argv)
+    if args.cmd == "compare":
+        return cmd_compare(args)
     return cmd_report(args)

@@ -25,6 +25,13 @@ class Measurement:
     power_source: str
     iters: int
     warmup: int
+    #: relative spread between the two timed half-windows — a *same-point*
+    #: repetition-noise estimate for cross-run comparison tolerances,
+    #: unlike the straggler watchdog's cross-point spread which mixes in
+    #: sweep heterogeneity. None when the region ran as a single window
+    #: (iters=1): one sample cannot estimate spread, and a fabricated 0.0
+    #: would give the least-evidence configuration the tightest gate.
+    rel_spread: Optional[float] = None
 
     @property
     def us(self) -> float:
@@ -58,6 +65,7 @@ class RunContext:
         self.iters = iters
         self.smoke = smoke
         self.cache: dict = {}
+        self.last_measurement: Optional[Measurement] = None
 
     def memo(self, key, factory: Callable[[], object]):
         """Cross-point cache: build once, reuse for every sweep point."""
@@ -73,6 +81,13 @@ class RunContext:
         Blocks on the last returned value (jax async dispatch) before
         reading the clock; wraps the timed window in the jpwr-style power
         scope when measurement is enabled, charging energy per iteration.
+
+        With ``iters >= 2`` the timed region runs as two blocked
+        half-windows; the relative disagreement of their per-iteration
+        times is returned as ``rel_spread`` — the same-point noise figure
+        the cross-run comparison tolerance model widens by. Iterations
+        still dispatch asynchronously within each half, so only one extra
+        device sync is added per measurement.
         """
         import jax
 
@@ -84,22 +99,32 @@ class RunContext:
         if out is not None:
             jax.block_until_ready(out)
         methods = self.power_methods if power else []
-        t0 = time.perf_counter()
+        halves = [iters] if iters < 2 else [iters - iters // 2, iters // 2]
+
+        def timed_window(n: int) -> float:
+            t0 = time.perf_counter()
+            o = None
+            for _ in range(n):
+                o = fn(*args, **kw)
+            if o is not None:
+                jax.block_until_ready(o)
+            return time.perf_counter() - t0
+
         if methods:
             with get_power(methods, self.power_interval_ms) as scope:
-                for _ in range(iters):
-                    out = fn(*args, **kw)
-                if out is not None:
-                    jax.block_until_ready(out)
+                times = [timed_window(n) for n in halves]
             energy = scope.total_energy_wh() / iters
         else:
-            for _ in range(iters):
-                out = fn(*args, **kw)
-            if out is not None:
-                jax.block_until_ready(out)
+            times = [timed_window(n) for n in halves]
             energy = 0.0
-        dt = (time.perf_counter() - t0) / iters
-        return Measurement(seconds=dt, energy_wh=energy,
-                           power_source=self.power_source if power
-                           else "none",
-                           iters=iters, warmup=warmup)
+        dt = sum(times) / iters
+        rel_spread = None
+        if len(times) == 2 and dt > 0.0:
+            per = [t / n for t, n in zip(times, halves)]
+            rel_spread = abs(per[0] - per[1]) / dt
+        m = Measurement(seconds=dt, energy_wh=energy,
+                        power_source=self.power_source if power
+                        else "none",
+                        iters=iters, warmup=warmup, rel_spread=rel_spread)
+        self.last_measurement = m
+        return m

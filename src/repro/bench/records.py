@@ -10,18 +10,57 @@ on-disk layout under ``artifacts/bench/<workload>/`` is
 
 written through :mod:`repro.core.results` so the files are atomic and a
 partially-interrupted sweep never truncates completed points.
+
+Schema history
+--------------
+  v1  point/metrics/power_source/n_devices/attempts/status/error
+  v2  adds ``git_sha`` (commit of the benchmarked tree) and ``noise``
+      (tolerance inputs for cross-run comparison: the relative step-time
+      spread the runner's straggler watchdog observed). v1 documents load
+      transparently — the new fields default to "unknown provenance" and
+      comparison falls back to the per-metric base tolerance.
+
+This module also owns the two helpers the cross-run comparison engine
+(:mod:`repro.bench.compare`) joins on: the canonical :func:`point_key`
+and :func:`compare_metrics` extraction with per-metric direction.
 """
 from __future__ import annotations
 
 import json
 import pathlib
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, fields
 from typing import Optional
 
 from repro.core.results import atomic_write_text
 from repro.power.frame import Frame
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+
+#: metrics the comparison engine understands: name -> (higher_is_better,
+#: default relative tolerance). Anything else a workload emits (structural
+#: counts, booleans, notes) is carried in the record but not delta-gated.
+COMPARED_METRICS: dict[str, tuple[bool, float]] = {
+    # throughput — higher is better
+    "tokens_per_s": (True, 0.20),
+    "images_per_s": (True, 0.20),
+    "decode_tok_s": (True, 0.20),
+    "speedup_vs_fixed": (True, 0.25),
+    # energy efficiency — higher is better
+    "tokens_per_wh": (True, 0.20),
+    "images_per_wh": (True, 0.20),
+    # step/latency time — lower is better
+    "seconds": (False, 0.20),
+    "ms_per_step": (False, 0.20),
+    "ms_per_iter": (False, 0.20),
+    "ms": (False, 0.20),
+    "us": (False, 0.20),
+    "ttft_s": (False, 0.30),
+    # energy cost — lower is better
+    "wh_per_token": (False, 0.25),
+    "wh_per_request": (False, 0.25),
+    "energy_wh_per_step": (False, 0.25),
+    "energy_wh": (False, 0.25),
+}
 
 
 @dataclass
@@ -36,11 +75,23 @@ class ResultRecord:
     attempts: int = 1
     status: str = "ok"                 # "ok" | "error" | "skipped"
     error: Optional[str] = None
+    git_sha: Optional[str] = None      # commit of the benchmarked tree (v2)
+    noise: dict = field(default_factory=dict)  # tolerance inputs (v2)
     schema_version: int = SCHEMA_VERSION
 
     @property
     def ok(self) -> bool:
         return self.status == "ok"
+
+    @property
+    def rel_std(self) -> float:
+        """Recorded relative step-time spread (0.0 when not recorded)."""
+        if not isinstance(self.noise, dict):
+            return 0.0
+        try:
+            return max(float(self.noise.get("rel_std", 0.0)), 0.0)
+        except (TypeError, ValueError):
+            return 0.0
 
     def flat(self) -> dict:
         """Single-level dict for CSV/result tables: point + metrics merged,
@@ -51,6 +102,8 @@ class ResultRecord:
         out.update(self.metrics)
         out.update(power_source=self.power_source, n_devices=self.n_devices,
                    attempts=self.attempts, status=self.status)
+        if self.git_sha:
+            out["git_sha"] = self.git_sha
         if self.error:
             out["error"] = self.error
         return out
@@ -65,27 +118,115 @@ class ResultRecord:
         if version > SCHEMA_VERSION or version < 1:
             raise ValueError(
                 f"ResultRecord schema_version {version} not supported "
-                f"(this reader understands <= {SCHEMA_VERSION})")
-        return cls(**d)
+                f"(this reader understands 1..{SCHEMA_VERSION})")
+        # v1 -> v2: provenance fields did not exist; dataclass defaults
+        # (git_sha=None, noise={}) are the correct upconversion. Unknown
+        # keys from a same-version writer are rejected loudly rather than
+        # surfacing later as an opaque TypeError/KeyError.
+        known = {f.name for f in fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(
+                f"ResultRecord v{version} has unknown fields {sorted(extra)}"
+                f"; known fields: {sorted(known)}")
+        if d.get("noise") is None:      # hand-edited/null noise tolerated
+            d["noise"] = {}
+        for name in ("point", "metrics", "noise"):
+            if name in d and not isinstance(d[name], dict):
+                raise ValueError(
+                    f"ResultRecord field {name!r} must be an object, "
+                    f"got {type(d[name]).__name__}")
+        try:
+            return cls(**d)
+        except TypeError as e:   # missing required field etc. — corrupt
+            raise ValueError(f"malformed ResultRecord: {e}") from None
+
+
+def point_key(rec: ResultRecord, *, with_power: bool = True) -> str:
+    """Canonical join key for cross-run comparison.
+
+    Two records describe the same measurement point iff their workload,
+    Space parameters (order-insensitive), device count — and, unless
+    ``with_power=False``, power source — agree. The power source is part
+    of the key so RAPL-measured and synthetic-modeled energies are never
+    silently diffed against each other; the power-stripped variant lets
+    the compare engine *detect* that situation and flag it.
+    """
+    params = ",".join(f"{k}={rec.point[k]}" for k in sorted(rec.point))
+    key = f"{rec.workload}|{params}|ndev={rec.n_devices}"
+    if with_power:
+        key += f"|power={rec.power_source}"
+    return key
+
+
+def compare_metrics(rec: ResultRecord) -> dict[str, float]:
+    """The subset of a record's metrics the comparison engine delta-gates,
+    as floats, in ``COMPARED_METRICS`` order."""
+    out = {}
+    for name in COMPARED_METRICS:
+        if name in rec.metrics:
+            try:
+                out[name] = float(rec.metrics[name])
+            except (TypeError, ValueError):
+                continue
+    return out
+
+
+def metric_direction(name: str) -> bool:
+    """True when higher values of ``name`` are better."""
+    return COMPARED_METRICS[name][0]
+
+
+def metric_tolerance(name: str) -> float:
+    """Default relative tolerance for ``name``."""
+    return COMPARED_METRICS[name][1]
+
+
+def result_doc(records: list) -> dict:
+    """The on-disk results/baseline document for a record list."""
+    workload = records[0].workload if records else ""
+    return {"schema_version": SCHEMA_VERSION, "workload": workload,
+            "records": [r.to_dict() for r in records]}
+
+
+def write_result_doc(records: list, path) -> None:
+    """Atomically write the schema-versioned JSON document (no CSV)."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    atomic_write_text(path, json.dumps(result_doc(records), indent=1,
+                                       default=str))
 
 
 def save_records(records: list, out_dir, name: str = "results") -> None:
     """Write the schema-versioned JSON + flat CSV pair (atomically)."""
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
-    workload = records[0].workload if records else ""
-    doc = {"schema_version": SCHEMA_VERSION, "workload": workload,
-           "records": [r.to_dict() for r in records]}
-    atomic_write_text(out / f"{name}.json",
-                      json.dumps(doc, indent=1, default=str))
+    write_result_doc(records, out / f"{name}.json")
     atomic_write_text(out / f"{name}.csv",
                       Frame.from_records([r.flat() for r in records]).to_csv())
 
 
 def load_records(path) -> list:
-    """Read a results.json back into ResultRecords (version-checked)."""
-    doc = json.loads(pathlib.Path(path).read_text())
+    """Read a results.json back into ResultRecords (version-checked).
+
+    Rejects unversioned/foreign documents and unsupported versions with a
+    ValueError naming the file — the reader must never degrade into a
+    KeyError deep inside rendering or comparison.
+    """
+    path = pathlib.Path(path)
+    doc = json.loads(path.read_text())
     if isinstance(doc, list):   # pre-schema layout (plain record list)
         raise ValueError(f"{path}: unversioned legacy results; re-run the "
                          f"benchmark through `python -m repro.bench run`")
-    return [ResultRecord.from_dict(d) for d in doc.get("records", [])]
+    if not isinstance(doc, dict) or "records" not in doc:
+        raise ValueError(f"{path}: not a results document (no 'records')")
+    version = doc.get("schema_version")
+    if not isinstance(version, int) or not 1 <= version <= SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: results schema_version {version!r} not supported "
+            f"(this reader understands 1..{SCHEMA_VERSION}); re-run the "
+            f"benchmark or upgrade repro.bench")
+    try:
+        return [ResultRecord.from_dict(d) for d in doc["records"]]
+    except ValueError as e:
+        raise ValueError(f"{path}: {e}") from None

@@ -9,6 +9,7 @@ persist normalized ``ResultRecord``s incrementally + a manifest.
 """
 from __future__ import annotations
 
+import math
 import pathlib
 import time
 from typing import Optional, Sequence
@@ -16,7 +17,7 @@ from typing import Optional, Sequence
 from repro.bench.context import RunContext
 from repro.bench.records import ResultRecord, save_records
 from repro.bench.spec import WorkloadSpec
-from repro.core.manifest import write_manifest
+from repro.core.manifest import git_sha, write_manifest
 from repro.core.results import table
 from repro.core.runner import StragglerWatchdog, run_attempts
 from repro.power.methods import PowerMethod, select_power_methods
@@ -98,9 +99,11 @@ class WorkloadRunner:
 
     def _run_point(self, pt: dict, ctx: RunContext) -> ResultRecord:
         spec = self.spec
+        ctx.last_measurement = None
         rec = ResultRecord(workload=spec.name, point=dict(pt),
                            power_source=self.power_source,
-                           n_devices=spec.n_devices)
+                           n_devices=spec.n_devices,
+                           git_sha=git_sha())
         t0 = time.perf_counter()
         ok, step_fns, attempts = run_attempts(
             "build", lambda: spec.build(pt, ctx), self.retries,
@@ -120,6 +123,31 @@ class WorkloadRunner:
         dt = time.perf_counter() - t0
         if self.watchdog.observe(len(self.records), dt):
             rec.metrics["straggler"] = True
+        # tolerance inputs for `repro.bench compare`: prefer the split
+        # timed-window spread of this point's own ctx.measure call (pure
+        # repetition noise); the watchdog's warmup-seeded spread is the
+        # fallback for workloads that orchestrate their own timing, and
+        # mixes in cross-point sweep heterogeneity (hence the cap in
+        # compare.effective_tolerance)
+        m = ctx.last_measurement
+        if m is not None and m.rel_spread is not None:
+            # two timed half-windows back this estimate, not the
+            # watchdog's cross-point count
+            rel_std, noise_src, samples = m.rel_spread, "measure_split", 2
+        else:
+            rel_std, noise_src, samples = (self.watchdog.rel_std(),
+                                           "watchdog", self.watchdog.n)
+        rec.noise = {"rel_std": round(rel_std, 6), "source": noise_src,
+                     "samples": samples,
+                     "point_seconds": round(dt, 6)}
+        if spec.compare_tols:
+            # non-finite floats would serialize as bare `Infinity` — not
+            # RFC JSON, and the baseline store is a committed, diffable
+            # artifact; "inf" parses back via float() in compare
+            rec.noise["tols"] = {
+                k: v if isinstance(v, (int, float)) and math.isfinite(v)
+                else "inf"
+                for k, v in spec.compare_tols.items()}
         return rec
 
     def result_table(self) -> str:

@@ -56,6 +56,11 @@ class WorkloadSpec:
     result_columns: Optional[list] = None
     primary_metric: Optional[str] = None  # headline column for emit lines
     heatmap_keys: Optional[tuple] = None  # (row, col, val) -> render heatmap
+    #: per-metric relative-tolerance overrides for cross-run comparison
+    #: ("default" rekeys them all; inf exempts — e.g. a CPU interpret-mode
+    #: microbench whose absolute timings are not gateable). The runner
+    #: stamps these into each record so `compare` needs no registry.
+    compare_tols: Optional[dict] = None
     description: str = ""
 
     def space_for(self, smoke: bool = False,
@@ -93,7 +98,8 @@ def workload(name: str, *, analog: str, space: Space, n_devices: int = 1,
              tags: Iterable[str] = (), smoke: Optional[dict] = None,
              result_columns: Optional[list] = None,
              primary_metric: Optional[str] = None,
-             heatmap_keys: Optional[tuple] = None):
+             heatmap_keys: Optional[tuple] = None,
+             compare_tols: Optional[dict] = None):
     """Decorator: register ``build(point, ctx)`` as a WorkloadSpec."""
 
     def deco(build: BuildFn) -> WorkloadSpec:
@@ -101,7 +107,7 @@ def workload(name: str, *, analog: str, space: Space, n_devices: int = 1,
             name=name, analog=analog, space=space, build=build,
             n_devices=n_devices, tags=frozenset(tags), smoke_axes=smoke,
             result_columns=result_columns, primary_metric=primary_metric,
-            heatmap_keys=heatmap_keys,
+            heatmap_keys=heatmap_keys, compare_tols=compare_tols,
             description=(build.__doc__ or "").strip().splitlines()[0]
             if build.__doc__ else ""))
 

@@ -40,6 +40,11 @@ def _flash_inputs(case: str):
     tags=("kernels", "smoke", "full"),
     result_columns=["case", "impl", "us", "interpret"],
     primary_metric="us",
+    # interpret-mode microsecond timings on shared CPU hosts swing up to
+    # ~10x run-to-run; absolute time is not gateable here (the docstring's
+    # correctness-scale caveat). Cross-run compare still gates point
+    # presence and error status — just not the timing deltas.
+    compare_tols={"default": float("inf")},
 )
 def build(pt, ctx):
     """Pallas-vs-XLA kernel timing sweep."""

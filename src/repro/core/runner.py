@@ -70,6 +70,18 @@ class StragglerWatchdog:
                                 "mean": self.mean})
         return straggler
 
+    def rel_std(self) -> float:
+        """Observed relative step-time spread (std/mean), 0.0 until the
+        warmup window has produced a variance estimate.
+
+        This is the noise figure the cross-run comparison engine widens
+        its per-metric tolerance by: a run whose own step times wobbled
+        10% cannot support a 5% regression verdict.
+        """
+        if self.n < 2 or self.mean <= 0.0:
+            return 0.0
+        return max(self.var, 0.0) ** 0.5 / self.mean
+
 
 def run_attempts(name: str, fn: Callable[[], dict], retries: int,
                  *, log_prefix: str = ""):
