@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-all ci bench bench-smoke bench-serve bench-list \
-        bench-compare bench-promote
+        bench-compare bench-promote bench-trajectory
 
 test:
 	$(PY) -m pytest -x -q
@@ -44,3 +44,17 @@ bench-promote:   ## refresh the committed baselines from a fresh smoke run
 	$(PY) -m repro.bench run --tags smoke --power synthetic \
 	    --out artifacts/ci-bench
 	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench --promote
+
+WORKLOAD ?= serve
+LABEL ?= local run
+
+# append-only perf history (BENCH_<workload>.json at the repo root):
+# promotion REPLACES the baseline store, so record the old->new compare
+# BEFORE `make bench-promote` and commit both
+bench-trajectory:  ## fresh smoke run diffed against baselines -> BENCH_*.json
+	rm -rf artifacts/ci-bench
+	$(PY) -m repro.bench run --suite $(WORKLOAD) --tags smoke \
+	    --power synthetic --out artifacts/ci-bench
+	$(PY) scripts/bench_trajectory.py --workload $(WORKLOAD) \
+	    --baseline $(BASELINES) --current artifacts/ci-bench \
+	    --label "$(LABEL)"

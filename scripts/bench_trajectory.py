@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Append a cross-run compare entry to a BENCH_<workload>.json trajectory.
+
+The baseline-store files under ``artifacts/bench/baselines/`` are
+*replaced* on every ``compare --promote``; this script is the memory
+they lose: each invocation appends one entry — the compare summary plus
+the headline per-point metric ratios — to a committed, append-only
+``BENCH_<workload>.json`` at the repo root, so the performance history
+of a workload survives across promotions and PRs.
+
+    PYTHONPATH=src python scripts/bench_trajectory.py --workload serve \
+        --baseline artifacts/bench/baselines --current artifacts/ci-bench \
+        --label "PR 4: paged KV + fused decode"
+
+``--backfill-axis key=value`` (repeatable) handles Space schema growth:
+when a workload gains a new axis, the old baseline's points predate it
+and would no longer join by point key. Backfilling stamps the given
+value into every *baseline* point that lacks the key — comparing the
+pre-axis measurement against the named configuration of the new sweep.
+Use it only with the value that describes what the old code actually
+ran (e.g. the serve workload grew ``cache={slotted,paged}`` in PR 4; the
+pre-PR engine was the dense slotted layout at every cell).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.bench.compare import NOISE_K, compare_sets, load_result_set  # noqa: E402
+from repro.bench.records import compare_metrics  # noqa: E402
+from repro.core.manifest import git_sha  # noqa: E402
+from repro.core.results import atomic_write_text  # noqa: E402
+
+#: headline metrics recorded per point (full deltas stay in the report)
+TRAJECTORY_METRICS = ("decode_tok_s", "tokens_per_s", "images_per_s",
+                      "wh_per_token", "occupancy", "speedup_vs_fixed",
+                      "speedup_vs_slotted")
+
+
+def _num(x):
+    """RFC-JSON-safe number: non-finite floats become strings (the
+    trajectory file is committed; bare NaN/Infinity tokens are not JSON)."""
+    if isinstance(x, (int, float)) and not math.isfinite(x):
+        return str(x)
+    return x
+
+
+def parse_axis(kv: str) -> tuple[str, str]:
+    if "=" not in kv:
+        raise argparse.ArgumentTypeError(f"--backfill-axis wants key=value, "
+                                         f"got {kv!r}")
+    k, v = kv.split("=", 1)
+    return k, v
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="append a compare entry to BENCH_<workload>.json")
+    ap.add_argument("--workload", required=True)
+    ap.add_argument("--baseline", default="artifacts/bench/baselines")
+    ap.add_argument("--current", default="artifacts/ci-bench")
+    ap.add_argument("--out", default=None,
+                    help="trajectory file (default BENCH_<workload>.json)")
+    ap.add_argument("--label", default="",
+                    help="one-line description of what changed")
+    ap.add_argument("--backfill-axis", type=parse_axis, action="append",
+                    default=[], metavar="KEY=VALUE",
+                    help="stamp a missing Space axis into baseline points "
+                         "(schema-growth join; see module docstring)")
+    ap.add_argument("--noise-k", type=float, default=NOISE_K,
+                    help="noise-widening multiplier for classification "
+                         "(0 classifies on base tolerances alone — for "
+                         "trajectories against old records whose stamped "
+                         "watchdog noise is a cross-point artifact)")
+    args = ap.parse_args(argv)
+
+    base = [r for r in load_result_set(args.baseline)
+            if r.workload == args.workload]
+    cur = [r for r in load_result_set(args.current)
+           if r.workload == args.workload]
+    if not cur:
+        print(f"[trajectory] no {args.workload!r} records in "
+              f"{args.current}", file=sys.stderr)
+        return 2
+    for key, value in args.backfill_axis:
+        for r in base:
+            r.point.setdefault(key, value)
+
+    cmp = compare_sets(base, cur, noise_k=args.noise_k,
+                       baseline_label=str(args.baseline),
+                       current_label=str(args.current))
+    points = []
+    cur_by = {}
+    for r in cur:
+        cur_by[json.dumps(dict(r.point), sort_keys=True, default=str)] = r
+    for p in cmp.points:
+        row = {"point": p.point, "status": p.status, "metrics": {}}
+        for d in p.deltas:
+            if d.metric in TRAJECTORY_METRICS:
+                ratio = (d.current / d.base) if d.base else None
+                if ratio is not None and math.isfinite(ratio):
+                    ratio = round(ratio, 4)
+                row["metrics"][d.metric] = {
+                    "baseline": _num(d.base), "current": _num(d.current),
+                    "ratio": _num(ratio),
+                    "status": d.status,
+                }
+        rec = cur_by.get(json.dumps(dict(p.point), sort_keys=True,
+                                    default=str))
+        if rec is not None:   # metrics with no baseline twin (new axes)
+            for m, v in compare_metrics(rec).items():
+                if m in TRAJECTORY_METRICS and m not in row["metrics"]:
+                    row["metrics"][m] = {"current": _num(v)}
+        points.append(row)
+
+    entry = {
+        "workload": args.workload,
+        "git_sha": git_sha(),
+        "label": args.label,
+        "baseline": str(args.baseline),
+        "current": str(args.current),
+        "backfilled_axes": dict(args.backfill_axis),
+        "noise_k": args.noise_k,
+        "summary": cmp.counts(),
+        "points": points,
+    }
+    out = pathlib.Path(args.out or f"BENCH_{args.workload}.json")
+    history = json.loads(out.read_text()) if out.exists() else []
+    if not isinstance(history, list):
+        print(f"[trajectory] {out} is not a JSON list; refusing to clobber",
+              file=sys.stderr)
+        return 2
+    history.append(entry)
+    atomic_write_text(out, json.dumps(history, indent=1, default=str) + "\n")
+    print(f"[trajectory] {out}: {len(history)} entries; {cmp.summary()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

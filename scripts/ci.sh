@@ -19,10 +19,22 @@ python -m pytest -x -q
 # 3. Every smoke-tagged workload end-to-end through the unified CLI on
 #    the deterministic synthetic power backend (multi-device workloads
 #    get their forced host platform via the CLI's XLA_FLAGS re-exec).
+#    The serve workload's smoke points cover BOTH KV layouts
+#    (cache=slotted and cache=paged) on the XLA paged path.
 python -m repro.bench list
 rm -rf artifacts/ci-bench   # no stale results from earlier local runs
 python -m repro.bench run --tags smoke --power synthetic \
     --out artifacts/ci-bench
+
+# 3b. Paged decode-attention kernel drill: one serve cell with every
+#     decode step routed through the Pallas kernel in interpret mode on
+#     CPU (REPRO_PAGED_IMPL=pallas-interpret). This is a correctness
+#     gate only — interpret-mode timings are meaningless, so the run
+#     lands in a scratch dir and is never compared or promoted.
+rm -rf artifacts/ci-paged-kernel
+REPRO_PAGED_IMPL=pallas-interpret python -m repro.bench run --suite serve \
+    --points cache=paged,policy=continuous --tags smoke --power synthetic \
+    --out artifacts/ci-paged-kernel
 
 # 4. Regression gate: the smoke run just produced must not be slower or
 #    hungrier than the committed baselines beyond tolerance. The base

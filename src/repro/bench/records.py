@@ -45,6 +45,11 @@ COMPARED_METRICS: dict[str, tuple[bool, float]] = {
     "images_per_s": (True, 0.20),
     "decode_tok_s": (True, 0.20),
     "speedup_vs_fixed": (True, 0.25),
+    "speedup_vs_slotted": (True, 0.25),
+    # scheduler health — mean decode-step batch occupancy (active slots /
+    # n_slots); a drop means admission/refill regressed even when raw
+    # throughput noise hides it
+    "occupancy": (True, 0.25),
     # energy efficiency — higher is better
     "tokens_per_wh": (True, 0.20),
     "images_per_wh": (True, 0.20),

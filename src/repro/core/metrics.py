@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.roofline.analysis import PEAK_FLOPS_BF16
 
@@ -134,6 +134,12 @@ class ServeSummary:
     attributed_wh: float        # sum of per-request attributions
     mean_ttft_s: float
     p95_ttft_s: float
+    #: mean decode-step batch occupancy: active slots / n_slots averaged
+    #: over decode micro-steps. The scheduler-health figure — continuous
+    #: refill should hold it near 1.0 under load while the fixed-batch
+    #: barrier decays toward mean(batch)/max(batch); a regression here
+    #: is a scheduling bug even when throughput noise masks it.
+    mean_occupancy: float = 0.0
 
     @property
     def decode_tok_s(self) -> float:
@@ -155,21 +161,33 @@ class ServeSummary:
         return max(self.total_energy_wh - self.attributed_wh, 0.0)
 
 
-def serve_summary(results, steps, ts, ws) -> ServeSummary:
-    """Build the aggregate summary from per-request results + step log."""
+def serve_summary(results, steps, ts, ws,
+                  n_slots: Optional[int] = None) -> ServeSummary:
+    """Build the aggregate summary from per-request results + step log.
+
+    ``n_slots`` enables the occupancy figure: each decode window credits
+    one token per active slot per fused micro-step (``n_steps``), so
+    mean per-step occupancy is total decode tokens over
+    ``n_slots * total micro-steps``.
+    """
     results = list(results)
     ttfts = sorted(r.ttft_s for r in results) or [0.0]
     wall = (max(r.finish_s for r in results)
             - min(r.admitted_s for r in results)) if results else 0.0
     total = window_energy_wh(ts, ws, ts[0], ts[-1]) if len(ts) > 1 else 0.0
+    decode = [s for s in steps if s.kind == "decode"]
+    micro = sum(getattr(s, "n_steps", 1) for s in decode)
+    occupancy = (sum(s.n_tokens for s in decode) / (n_slots * micro)
+                 if n_slots and micro else 0.0)
     return ServeSummary(
         n_requests=len(results),
         n_tokens=sum(r.n_tokens for r in results),
         wall_s=wall,
-        decode_s=sum(s.duration_s for s in steps if s.kind == "decode"),
+        decode_s=sum(s.duration_s for s in decode),
         prefill_s=sum(s.duration_s for s in steps if s.kind == "prefill"),
         total_energy_wh=total,
         attributed_wh=sum(r.energy_wh for r in results),
         mean_ttft_s=sum(ttfts) / len(ttfts),
         p95_ttft_s=ttfts[min(int(0.95 * len(ttfts)), len(ttfts) - 1)],
+        mean_occupancy=occupancy,
     )

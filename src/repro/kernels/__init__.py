@@ -1,5 +1,28 @@
+"""Pallas TPU kernels + jnp oracles for the hot paths.
+
+Layout of the package:
+
+  ref.py               pure-jnp oracles — the semantics every kernel
+                       must match (swept + property-tested).
+  flash_attention.py   prefill/train flash attention (GQA, causal,
+                       windowed) over dense (B, S) layouts.
+  decode_attention.py  single-token GQA decode over the *paged* KV
+                       layout: fixed-size blocks in a shared pool,
+                       per-sequence block tables (scalar-prefetch index
+                       maps), masking by true per-sequence length —
+                       the serve decode hot path.
+  rmsnorm.py           fused rmsnorm.
+  ops.py               jit'd dispatch: ``impl="pallas"`` on TPU (or
+                       ``interpret=True`` on CPU for validation),
+                       ``impl="xla"`` for the reference/dry-run path —
+                       the selection map lives in its docstring.
+"""
 from repro.kernels import ops, ref
+from repro.kernels.decode_attention import (
+    paged_decode_attention as paged_decode_attention_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm as rmsnorm_pallas
 
-__all__ = ["ops", "ref", "flash_attention_pallas", "rmsnorm_pallas"]
+__all__ = ["ops", "ref", "flash_attention_pallas",
+           "paged_decode_attention_pallas", "rmsnorm_pallas"]

@@ -1,0 +1,133 @@
+"""Pallas TPU paged decode attention (single-token GQA over a block pool).
+
+The serve decode hot path: each sequence holds one new query token and a
+*paged* KV history — fixed-size blocks scattered through a shared pool,
+addressed by a per-sequence block table (``serve.cache.PagedKVCache``).
+The kernel walks only the table, never a dense ``(B, max_len)`` cache
+row, so attention work scales with the tokens a sequence actually owns
+instead of the padded slot capacity.
+
+TPU-native design (mirrors ``flash_attention.py``):
+  - grid ``(B, Kh, nb)``; the block dimension is innermost, which Pallas
+    TPU executes SEQUENTIALLY per core, so the online-softmax running
+    state (m, l, acc) lives in VMEM scratch and is carried across the
+    sequence's blocks;
+  - the block table and true lengths ride in as **scalar prefetch**
+    arguments (``pltpu.PrefetchScalarGridSpec``): the k/v BlockSpec
+    index map reads ``tables[b, j]`` to DMA the *physical* pool block —
+    the paged indirection costs one SMEM lookup, not a gather;
+  - GQA is expressed in the q layout: q is viewed as ``(B, Kh, G, Dh)``
+    so the ``G = H // Kh`` query heads sharing a KV head are one MXU
+    operand; repeated KV is never materialized;
+  - blocks at or beyond a sequence's length are skipped with ``pl.when``
+    (no MXU work); unowned table columns point at the trash block 0, so
+    the skipped DMA cannot fault. Masking inside the boundary block is
+    positional (``kpos < length``), with the optional sliding window
+    applied the same way as the slotted path.
+
+Validated against ``kernels.ref.paged_decode_attention_ref`` in
+interpret mode (tests sweep block sizes, GQA groups, ragged lengths and
+alloc/free block-table permutations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, bs: int, nb: int,
+                   window: Optional[int]):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    run = j * bs < length                      # block holds visible keys
+    if window is not None:
+        run = jnp.logical_and(run, (j + 1) * bs - 1 > length - 1 - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bs)
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < length
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, Dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           tables: jax.Array, lengths: jax.Array, *,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, Dh); k/v_pool: (n_blocks, bs, Kh, Dh); tables: (B, nb)
+    int32 physical block ids; lengths: (B,) int32 KV length per sequence
+    including the current token. Returns (B, H, Dh)."""
+    b, h, dh = q.shape
+    bs, kh = k_pool.shape[1], k_pool.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    nb = tables.shape[1]
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=bs, nb=nb,
+                               window=window)
+
+    def kv_index(bi, khi, j, tables_ref, lengths_ref):
+        return (tables_ref[bi, j], 0, khi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda bi, khi, j, tr, lr: (bi, khi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh), kv_index),
+            pl.BlockSpec((1, bs, 1, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, khi, j, tr, lr: (bi, khi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q.reshape(b, kh, g, dh), k_pool, v_pool)
+    return out.reshape(b, h, dh)

@@ -3,6 +3,19 @@
 ``impl="pallas"`` targets TPU (or interpret mode on CPU for validation);
 ``impl="xla"`` routes to the pure-jnp reference path. The model code uses
 the XLA path for the CPU dry-run; real-TPU deployments flip the flag.
+
+Selection map (who runs what, where):
+
+  flash_attention        prefill/train attention; ``impl="pallas"`` on
+                         TPU, ``impl="xla"`` (ref) on CPU.
+  paged_decode_attention the serve decode hot path over a paged KV pool
+                         (``serve.cache.PagedKVCache`` block tables).
+                         ``impl="xla"`` gathers the table into a dense
+                         view (the CPU/dry-run path the benchmark
+                         measures); ``impl="pallas"`` walks the table
+                         with scalar-prefetch DMA — the TPU deployment
+                         path, validated on CPU via ``interpret=True``.
+  rmsnorm                elementwise; same pallas/xla split.
 """
 from __future__ import annotations
 
@@ -13,6 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 
@@ -36,6 +52,23 @@ def flash_attention(q, k, v, *, causal: bool = True,
                         block_q=block_q, block_k=block_k,
                         interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("window", "impl", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
+                           window: Optional[int] = None, impl: str = "pallas",
+                           interpret: bool = False):
+    """Single-token GQA decode over a paged KV pool.
+
+    q: (B, H, Dh); k/v_pool: (n_blocks, bs, Kh, Dh); tables: (B, nb)
+    int32 physical block ids (position order, trash block 0 for unowned
+    columns); lengths: (B,) int32 KV length incl. the current token.
+    """
+    if impl == "xla":
+        return ref.paged_decode_attention_ref(q, k_pool, v_pool, tables,
+                                              lengths, window=window)
+    return _paged_decode_pallas(q, k_pool, v_pool, tables, lengths,
+                                window=window, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("impl", "interpret", "eps"))

@@ -37,6 +37,47 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, sq, h, dh).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, tables: jax.Array,
+                               lengths: jax.Array, *,
+                               window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Single-token GQA decode attention over a paged KV pool.
+
+    q:      (B, H, Dh)        — one query token per sequence;
+    k_pool: (n_blocks, bs, Kh, Dh) — the shared KV block pool (v_pool
+            alike); block contents cover contiguous position ranges
+            [j*bs, (j+1)*bs) of whichever sequence owns the block;
+    tables: (B, nb) int32     — per-sequence physical block ids, in
+            position order (column j holds positions [j*bs, (j+1)*bs));
+            columns a sequence does not own point at the trash block 0;
+    lengths:(B,) int32        — true KV length per sequence *including*
+            the current token (the query sits at position lengths-1).
+
+    Visible keys are kpos < length (causal: everything at or before the
+    query), additionally kpos > length-1-window when windowed. fp32
+    softmax; returns (B, H, Dh) in q.dtype. This is the semantics oracle
+    the Pallas kernel (kernels/decode_attention.py) must match.
+    """
+    b, h, dh = q.shape
+    nb = tables.shape[1]
+    bs, kh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    k = k_pool[tables].reshape(b, nb * bs, kh, dh).astype(jnp.float32)
+    v = v_pool[tables].reshape(b, nb * bs, kh, dh).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, kh, g, dh) * scale
+    scores = jnp.einsum("bkgd,btkd->bkgt", qf, k)
+    kpos = jnp.arange(nb * bs)[None, :]
+    mask = kpos < lengths[:, None]
+    if window is not None:
+        mask &= kpos > lengths[:, None] - 1 - window
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, scale: jax.Array,
                 eps: float = 1e-5) -> jax.Array:
     xf = x.astype(jnp.float32)

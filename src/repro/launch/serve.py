@@ -47,8 +47,12 @@ def _run_batch(args, c, params):
 def _run_scheduled(args, c, params):
     methods, source = select_power_methods("auto")
     max_len = args.prompt_len + args.gen + 1
+    if args.cache == "paged":   # paged pools allocate whole blocks
+        max_len = -(-max_len // args.block_size) * args.block_size
     engine = ServeEngine(c, params, n_slots=args.slots, max_len=max_len,
+                         cache=args.cache, block_size=args.block_size,
                          power_methods=methods)
+    engine.warmup(prompt_len=args.prompt_len)
     reqs = poisson_requests(args.requests, args.rate, c.vocab,
                             prompt_len=args.prompt_len, seed=args.seed,
                             short=(max(args.gen // 4, 1), args.gen),
@@ -58,7 +62,8 @@ def _run_scheduled(args, c, params):
     print(f"[serve] arch={c.name} mode={args.mode} slots={args.slots} "
           f"rate={args.rate:g}/s power={source}")
     print(f"  {s.n_requests} requests, {s.n_tokens} tokens in "
-          f"{s.wall_s:.2f} s -> {s.decode_tok_s:,.0f} tok/s")
+          f"{s.wall_s:.2f} s -> {s.decode_tok_s:,.0f} tok/s "
+          f"(cache={args.cache}, occupancy {s.mean_occupancy:.2f})")
     print(f"  ttft mean {s.mean_ttft_s * 1e3:.1f} ms / p95 "
           f"{s.p95_ttft_s * 1e3:.1f} ms")
     print(f"  energy {s.attributed_wh:.4f} Wh attributed "
@@ -80,6 +85,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache", choices=["slotted", "paged"],
+                    default="slotted",
+                    help="KV layout: dense per-slot rows or the paged "
+                         "block-table pool (serve.cache.PagedKVCache)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block size (tokens) for --cache paged")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=200.0,
                     help="Poisson arrival rate (req/s)")

@@ -307,7 +307,11 @@ def prefill_attention(c: ModelConfig, p: Params, x: jax.Array, *,
 
 def decode_attention(c: ModelConfig, p: Params, x: jax.Array,
                      cache_k: jax.Array, cache_v: jax.Array,
-                     pos: jax.Array, *, impl: str = "grouped"):
+                     pos: jax.Array, *, impl: str = "grouped",
+                     block_tables: Optional[jax.Array] = None,
+                     n_kv_blocks: Optional[int] = None,
+                     paged_impl: str = "xla",
+                     paged_interpret: bool = False):
     """One-token decode against a fixed-size KV cache.
 
     x: (B, 1, D); cache_k/v: (B, T, Kh, Dh); pos: scalar int32 (step
@@ -320,12 +324,42 @@ def decode_attention(c: ModelConfig, p: Params, x: jax.Array,
     ``window`` entries (O(window) per step); otherwise the new token
     attends to all cached positions <= pos under a (per-row) mask
     (O(T) per step — linear, not quadratic).
+
+    Paged path (``block_tables`` given): cache_k/v are *shared block
+    pools* ``(n_blocks, bs, Kh, Dh)`` and ``block_tables`` is the
+    ``(B, max_blocks)`` per-slot table (``serve.cache.PagedKVCache``).
+    The new token is scattered into its slot's current block; attention
+    walks only the first ``n_kv_blocks`` (static — the engine buckets it
+    to the longest live slot) table columns via
+    ``kernels.ops.paged_decode_attention``, masked by true per-slot
+    length — never the ``max_len``-padded row. ``pos`` must be the
+    per-slot vector; idle slots park at a position whose table column is
+    the trash block 0.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     per_slot = pos.ndim == 1
     positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = qkv_proj(c, p, x, positions if c.use_rope else None)
+
+    if block_tables is not None:
+        assert per_slot, "paged decode requires per-slot positions"
+        from repro.kernels import ops as _kops
+        bs_blk = cache_k.shape[1]
+        nb = n_kv_blocks if n_kv_blocks is not None else block_tables.shape[1]
+        blk = jnp.take_along_axis(block_tables, pos[:, None] // bs_blk,
+                                  axis=1)[:, 0]
+        off = pos % bs_blk
+        cache_k = cache_k.at[blk, off].set(
+            k_new[:, 0].astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[blk, off].set(
+            v_new[:, 0].astype(cache_v.dtype), mode="drop")
+        cache_k = _hint(cache_k, "cache_spec")
+        cache_v = _hint(cache_v, "cache_spec")
+        out = _kops.paged_decode_attention(
+            q[:, 0], cache_k, cache_v, block_tables[:, :nb], pos + 1,
+            window=c.attn_window, impl=paged_impl, interpret=paged_interpret)
+        return out_proj(p, out[:, None].astype(q.dtype)), cache_k, cache_v
 
     if per_slot:
         # independent write position per batch row (slot): row scatter

@@ -214,8 +214,16 @@ def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
 
 def stack_decode(c: ModelConfig, layers: Params, x: jax.Array, caches: Params,
                  pos: jax.Array, *, impl: str = "grouped",
-                 enc_kv_stacked=None, unroll: bool = False):
-    """One-token decode through the stack, updating caches in place."""
+                 enc_kv_stacked=None, unroll: bool = False,
+                 block_tables=None, n_kv_blocks: Optional[int] = None,
+                 paged_impl: str = "xla", paged_interpret: bool = False):
+    """One-token decode through the stack, updating caches in place.
+
+    ``block_tables`` selects the paged KV path: attention k/v cache
+    leaves are shared block pools and every layer reads the same
+    ``(B, max_blocks)`` table (see ``attention.decode_attention``);
+    SSM/conv state leaves stay per-slot rows in either layout.
+    """
     kinds = slot_kinds(c)
 
     def body(x, inp):
@@ -231,7 +239,11 @@ def stack_decode(c: ModelConfig, layers: Params, x: jax.Array, caches: Params,
             if mixer == "attn":
                 h, ck, cv = attn.decode_attention(c, sp["attn"], h,
                                                   sc["k"], sc["v"], pos,
-                                                  impl=impl)
+                                                  impl=impl,
+                                                  block_tables=block_tables,
+                                                  n_kv_blocks=n_kv_blocks,
+                                                  paged_impl=paged_impl,
+                                                  paged_interpret=paged_interpret)
                 new_cache[f"slot{i}"] = {"k": ck, "v": cv}
             else:
                 h, conv_s, ssm_s = ssm_mod.mamba_decode(c, sp["mamba"], h,

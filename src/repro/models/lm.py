@@ -135,31 +135,50 @@ def forward(c: ModelConfig, p: Params, tokens: jax.Array, *,
 def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
             patch_embeds: Optional[jax.Array] = None,
             enc_frames: Optional[jax.Array] = None, impl: str = "repeat",
-            unroll: bool = False):
-    """Process the prompt; return (last-position logits, caches, enc_kv)."""
+            unroll: bool = False, last_pos: Optional[jax.Array] = None):
+    """Process the prompt; return (last-position logits, caches, enc_kv).
+
+    ``last_pos`` (B,) int32 overrides which position's logits are
+    returned per row — the batched serve prefill right-pads prompts to a
+    shared length bucket and reads each request's logits at its *true*
+    last token (pad rows are never attended: causal masking hides them
+    from real tokens, and decode overwrites them in place).
+    """
     x = _inputs_to_embeds(c, p, tokens, patch_embeds)
     enc_kv = None
     if c.family == "encdec":
         _, enc_kv = encode(c, p, enc_frames, unroll=unroll)
     x, caches = blocks.stack_prefill(c, p["layers"], x, impl=impl,
                                      enc_kv_stacked=enc_kv, unroll=unroll)
-    x_last = apply_norm(c, p["final_norm"], x[:, -1:])
+    if last_pos is not None:
+        x_last = jnp.take_along_axis(
+            x, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+    else:
+        x_last = x[:, -1:]
+    x_last = apply_norm(c, p["final_norm"], x_last)
     logits = unembed(c, p["embed"], x_last)
     return logits, caches, enc_kv
 
 
 def decode_step(c: ModelConfig, p: Params, token: jax.Array, caches: Params,
                 pos: jax.Array, *, enc_kv: Params = None,
-                impl: str = "grouped", unroll: bool = False):
+                impl: str = "grouped", unroll: bool = False,
+                block_tables: Optional[jax.Array] = None,
+                n_kv_blocks: Optional[int] = None,
+                paged_impl: str = "xla", paged_interpret: bool = False):
     """token: (B, 1) int32; pos: scalar int32 OR per-row (B,) int32 (the
     continuous-batching engine decodes slots at independent positions).
-    Returns (logits, caches)."""
+    ``block_tables`` switches the attention layers onto the paged KV
+    pool (see ``blocks.stack_decode``). Returns (logits, caches)."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[:, None] if pos.ndim == 1 else jnp.full_like(token, pos)
     x = embed_tokens(c, p["embed"], token, positions)
     x, caches = blocks.stack_decode(c, p["layers"], x, caches, pos,
                                     impl=impl, enc_kv_stacked=enc_kv,
-                                    unroll=unroll)
+                                    unroll=unroll, block_tables=block_tables,
+                                    n_kv_blocks=n_kv_blocks,
+                                    paged_impl=paged_impl,
+                                    paged_interpret=paged_interpret)
     x = apply_norm(c, p["final_norm"], x)
     logits = unembed(c, p["embed"], x)
     return logits, caches

@@ -1,20 +1,34 @@
 """KV / SSM cache construction (abstract + concrete) + slot operations.
 
-Two layers:
+Three layers:
 
   * ``abstract_caches`` — ShapeDtypeStructs via eval_shape (dry-run path);
-  * slotted-cache ops — the continuous-batching engine's KV store. The
-    cache batch axis is a pool of ``n_slots`` rows of capacity
+  * slotted-cache ops — the reference KV store for continuous batching.
+    The cache batch axis is a pool of ``n_slots`` rows of capacity
     ``max_len``; finished requests free their row via ``insert_slot``
     (overwrite on refill) or ``reset_slot`` without retracing: the slot
     index is a *traced* argument, so one jitted program serves every
     slot, and donation makes the update in-place.
+  * ``PagedKVCache`` — the production layout: attention K/V lives in
+    fixed-size blocks inside one shared pool, addressed through
+    per-slot block tables. A slot holding ``t`` tokens owns
+    ``ceil(t / block_size)`` blocks instead of reserving a dense
+    ``max_len`` row, so short requests stop paying for long-request
+    capacity and the same HBM holds more live requests. Alloc/free is
+    host-side free-list bookkeeping (no retracing, no device work);
+    only the small ``(n_slots, max_blocks)`` int32 table is re-uploaded
+    when it changes. Block 0 is the *trash block*: every unowned table
+    column points at it, so idle slots riding along in the fused decode
+    step scatter their dead writes there instead of corrupting a
+    neighbour.
 
 Cache tree layout (from ``blocks.stack_prefill`` under scan):
-  attention slots:  {"k","v"}      leaves (L, B, T, Kh, Dh)
-  mamba slots:      {"ssm","conv"} leaves (L, B, ...) — T-independent
-The batch axis is axis 1 for every leaf, which is what the slot ops rely
-on; only "k"/"v" leaves carry the T axis (axis 2) and need growing.
+  attention slots:  {"k","v"}      leaves (L, B, T, Kh, Dh)  [slotted]
+                                   leaves (L, n_blocks, bs, Kh, Dh) [paged]
+  mamba slots:      {"ssm","conv"} leaves (L, B, ...) — T-independent,
+                                   per-slot rows in either layout.
+The batch/pool axis is axis 1 for every leaf, which is what the slot ops
+rely on; only "k"/"v" leaves carry the T axis (axis 2) and need growing.
 """
 from __future__ import annotations
 
@@ -23,11 +37,16 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import blocks, lm
 
 Params = Any
+
+
+class CacheOOM(RuntimeError):
+    """The paged pool ran out of free blocks (admission control signal)."""
 
 
 def abstract_caches(c: ModelConfig, batch: int, seq_len: int,
@@ -122,9 +141,185 @@ def reset_slot(caches: Params, slot: jax.Array) -> Params:
 
 
 @partial(jax.jit, donate_argnums=(0,))
+def insert_rows(caches: Params, rows: Params, slots: jax.Array) -> Params:
+    """Batched ``insert_slot``: write ``Kp`` prefill results at once.
+
+    ``rows`` is a cache tree whose batch axis holds Kp requests and
+    whose k/v T axis is the (static) prompt bucket ``S <= max_len``;
+    ``slots`` (Kp,) int32 names the target pool rows. Rows [S, max_len)
+    of the target keep whatever they held — a previous tenant's KV is
+    masked by position until decode overwrites it. Out-of-range slot ids
+    (>= n_slots) are *dropped*: the batch-bucketing pad rows of the
+    batched prefill vanish here instead of needing a mask.
+    """
+
+    def put(path, big, small):
+        if _is_kv(path):
+            s = small.shape[2]
+            return big.at[:, slots, :s].set(small.astype(big.dtype),
+                                            mode="drop")
+        return big.at[:, slots].set(small.astype(big.dtype), mode="drop")
+
+    return jax.tree_util.tree_map_with_path(put, caches, rows)
+
+
+@partial(jax.jit, donate_argnums=(0,))
 def compact_slots(caches: Params, perm: jax.Array) -> Params:
     """Gather batch rows by ``perm`` (n_slots,) — packs active slots to
     the front. Not needed by the fixed-pool engine (slots are
     position-independent) but the building block for shrinking the live
     batch under paged/variable-slot serving."""
     return jax.tree.map(lambda leaf: jnp.take(leaf, perm, axis=1), caches)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache (block-table KV pool)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("block_size",))
+def insert_paged_rows(caches: Params, rows: Params, blocks: jax.Array,
+                      slots: jax.Array, *, block_size: int) -> Params:
+    """Scatter a batched prefill result into the paged pool.
+
+    ``rows``: cache tree with k/v leaves (L, Kp, S, Kh, Dh) — S need not
+    be a block multiple: the k/v tail of a partial block is zero-padded
+    here (those rows are position-masked until decode overwrites them);
+    ``blocks``: (Kp, ceil(S / block_size)) int32 physical block ids per
+    request, in position order; ``slots``: (Kp,) int32 batch rows for
+    the T-independent state leaves. Out-of-range ids in either index
+    array are dropped (the batch-bucketing pad rows and the unowned
+    tail columns of short prompts).
+    """
+    flat_blocks = blocks.reshape(-1)
+
+    def put(path, big, small):
+        if _is_kv(path):
+            l, kp, s = small.shape[:3]
+            pad = -s % block_size
+            if pad:
+                widths = [(0, 0)] * small.ndim
+                widths[2] = (0, pad)
+                small = jnp.pad(small, widths)
+                s += pad
+            small = small.reshape((l, kp * (s // block_size), block_size)
+                                  + small.shape[3:])
+            return big.at[:, flat_blocks].set(small.astype(big.dtype),
+                                              mode="drop")
+        return big.at[:, slots].set(small.astype(big.dtype), mode="drop")
+
+    return jax.tree_util.tree_map_with_path(put, caches, rows)
+
+
+class PagedKVCache:
+    """Block-table KV cache: device pools + host allocator.
+
+    Device state (built once, then only updated in place by the jitted
+    serve programs through donation):
+
+      * ``caches`` — the model cache tree with every attention k/v leaf
+        replaced by a shared pool ``(L, n_blocks, block_size, Kh, Dh)``;
+        SSM/conv state leaves keep their per-slot ``(L, n_slots, ...)``
+        rows (they are O(1) per slot — paging buys nothing). The serve
+        engine takes ownership of this tree on first use (its jitted
+        programs donate it in place) and clears the attribute.
+      * ``device_tables()`` — the ``(n_slots, max_blocks)`` int32 block
+        table, re-uploaded only after alloc/free changed it.
+
+    Host state: a free list and per-slot owned-block lists. ``ensure``
+    grows a slot to a token capacity (raising :class:`CacheOOM` when the
+    pool is exhausted — the engine's admission-control signal), ``free``
+    returns a finished slot's blocks and points its table row back at
+    the trash block 0. Neither touches the device, so growing a slot
+    mid-generation costs nothing until the next table upload.
+
+    The default pool size reserves worst-case capacity
+    (``n_slots * ceil(max_len / block_size)`` + trash) so behaviour is
+    drop-in for the slotted cache; pass ``n_blocks`` to oversubscribe —
+    the real HBM lever: short requests only ever hold the blocks they
+    touched, so the freed reservation admits more slots per byte.
+    CAVEAT: the serve engine does not yet defer admission or preempt on
+    :class:`CacheOOM` — an oversubscribed pool whose concurrent load
+    outgrows it aborts the run (ROADMAP: paged serve follow-ups), so
+    oversubscribe only when the worst concurrent block demand is known.
+    """
+
+    def __init__(self, c: ModelConfig, n_slots: int, max_len: int,
+                 params: Params, *, block_size: int = 16,
+                 n_blocks: Optional[int] = None):
+        assert max_len % block_size == 0, (max_len, block_size)
+        self.c, self.n_slots, self.max_len = c, n_slots, max_len
+        self.block_size = block_size
+        self.max_blocks = max_len // block_size
+        total = (1 + n_slots * self.max_blocks) if n_blocks is None \
+            else int(n_blocks)
+        assert total >= 1 + self.max_blocks, (
+            f"pool of {total} blocks cannot hold even one full slot "
+            f"({self.max_blocks} blocks) plus the trash block")
+        self.n_blocks = total
+
+        abstract = lm.init_abstract(c) if params is None else params
+        (shapes, _), _ = abstract_caches(c, n_slots, max_len, abstract)
+
+        def make(path, leaf):
+            if _is_kv(path):
+                shape = ((leaf.shape[0], total, block_size) + leaf.shape[3:])
+                return jnp.zeros(shape, leaf.dtype)
+            return jnp.zeros(leaf.shape, leaf.dtype)
+
+        self.caches = jax.tree_util.tree_map_with_path(make, shapes)
+        self.tables_np = np.zeros((n_slots, self.max_blocks), np.int32)
+        self._tables = jnp.asarray(self.tables_np)
+        self._dirty = False
+        self._free = list(range(total - 1, 0, -1))   # block 0 = trash
+        self._owned: list[list[int]] = [[] for _ in range(n_slots)]
+
+    # -- allocator -------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def owned(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    def max_owned(self) -> int:
+        """Longest live slot, in blocks (>= 1: the idle-slot trash column
+        still has to be gathered by the decode program)."""
+        return max((len(o) for o in self._owned), default=1) or 1
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot`` to hold ``n_tokens`` total tokens."""
+        assert n_tokens <= self.max_len, (n_tokens, self.max_len)
+        need = -(-n_tokens // self.block_size)
+        owned = self._owned[slot]
+        while len(owned) < need:
+            if not self._free:
+                raise CacheOOM(
+                    f"paged pool exhausted: slot {slot} needs block "
+                    f"{len(owned) + 1}/{need}, 0 of {self.n_blocks} free")
+            blk = self._free.pop()
+            self.tables_np[slot, len(owned)] = blk
+            owned.append(blk)
+            self._dirty = True
+
+    def free(self, slot: int) -> None:
+        """Return a finished slot's blocks; its table row reverts to the
+        trash block so in-flight rides write harmlessly."""
+        if self._owned[slot]:
+            self._free.extend(reversed(self._owned[slot]))
+            self._owned[slot] = []
+            self.tables_np[slot] = 0
+            self._dirty = True
+
+    def block_ids(self, slot: int, n_tokens: int) -> np.ndarray:
+        """(ceil(n_tokens/bs),) physical ids covering [0, n_tokens)."""
+        need = -(-n_tokens // self.block_size)
+        assert len(self._owned[slot]) >= need, (slot, n_tokens)
+        return self.tables_np[slot, :need].copy()
+
+    # -- device views ----------------------------------------------------
+    def device_tables(self) -> jax.Array:
+        if self._dirty:
+            self._tables = jnp.asarray(self.tables_np)
+            self._dirty = False
+        return self._tables

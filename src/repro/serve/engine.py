@@ -1,9 +1,9 @@
 """Serving engine: continuous batching + fixed-batch policies, with
-energy-per-token accounting.
+energy-per-token accounting and a paged/slotted KV cache choice.
 
-``ServeEngine`` owns the jitted prefill/decode programs and the slotted
-KV cache (``serve.cache``); on top of that single engine sit two
-admission policies (``serve.scheduler``):
+``ServeEngine`` owns the jitted prefill/decode programs and the KV cache
+(``serve.cache``); on top of that single engine sit two admission
+policies (``serve.scheduler``):
 
   * ``continuous`` — Orca/vLLM-style iteration-level scheduling: slots
     refill from the queue between decode steps, requests early-exit on
@@ -12,11 +12,35 @@ admission policies (``serve.scheduler``):
     drain it, admit the next) — the baseline the serve benchmark
     measures continuous batching against.
 
+The decode hot path (model mode) is built around three mechanisms:
+
+  * **cache layouts** — ``cache="slotted"`` keeps the dense
+    ``(n_slots, max_len)`` row pool (the reference path);
+    ``cache="paged"`` switches to ``serve.cache.PagedKVCache``:
+    fixed-size KV blocks in a shared pool addressed by per-slot block
+    tables, with decode attention walking only the blocks a slot owns
+    (``models.attention.decode_attention`` paged path →
+    ``kernels.ops.paged_decode_attention``; the gathered table width is
+    bucketed to the longest live slot, so short batches never pay
+    ``max_len``).
+  * **batched prefill** — newly admitted requests prefill as one padded
+    batch per prompt-length bucket (one jitted program per bucket,
+    batch padded to ``n_slots`` so admission count never retraces);
+    first tokens arrive in a single host fetch instead of one
+    ``.item()`` per request.
+  * **fused decode runs** — when the scheduler can prove no slot can
+    finish for the next ``k`` steps (length budgets are known; EOS makes
+    ``k=1``), the engine dispatches ``k`` decode steps back-to-back with
+    the token stream chained **on device** and drains all ``k`` outputs
+    in one batched ``np.asarray`` fetch afterwards — scheduler
+    bookkeeping overlaps device compute instead of blocking every token.
+
 Energy: the engine reads its ``PowerMethod`` list synchronously at every
-step boundary, so each prefill/decode window is bracketed by samples and
-``repro.core.metrics.attribute_energy`` integrates exactly over it —
-yielding Wh/token and Wh/request per served request (the MLPerf-Power
-figure of merit).
+step-window boundary, so each prefill/decode window is bracketed by
+samples and ``repro.core.metrics.attribute_energy`` integrates exactly
+over it — yielding Wh/token and Wh/request per served request (the
+MLPerf-Power figure of merit). Fused windows credit each active rid once
+per micro-step, keeping the attribution exact.
 
 ``serve_step`` (single-token decode against a full KV cache) is what the
 ``decode_*`` / ``long_*`` dry-run shapes lower. ``BatchedServer`` remains
@@ -26,7 +50,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -39,9 +62,11 @@ from repro.core.metrics import (
 )
 from repro.core.runner import StragglerWatchdog
 from repro.models import lm
-from repro.serve.cache import grow_caches, insert_slot, slotted_cache
+from repro.serve.cache import (
+    PagedKVCache, grow_caches, insert_paged_rows, insert_rows, slotted_cache,
+)
 from repro.serve.requests import Request, RequestResult
-from repro.serve.scheduler import Scheduler, StepRecord
+from repro.serve.scheduler import Scheduler, Slot, StepRecord
 
 Params = Any
 
@@ -92,12 +117,15 @@ class ServeRunResult:
 
 
 class ServeEngine:
-    """Shared serving engine: jitted prefill/decode + slotted KV cache.
+    """Shared serving engine: jitted prefill/decode + slotted/paged KV.
 
     Model mode (the default): pass ``(c, params)`` — the engine jits
-    prefill/decode once and allocates an ``(n_slots, max_len)`` cache
-    pool on first use. ``max_len`` is the TOTAL per-slot capacity
-    (prompt + generated tokens).
+    prefill/decode once and allocates the cache pool on first use.
+    ``max_len`` is the TOTAL per-slot capacity (prompt + generated
+    tokens). ``cache`` selects the KV layout (``"slotted"`` dense rows /
+    ``"paged"`` block tables, see module docstring); ``decode_window``
+    caps how many decode steps a fused run may keep in flight (1
+    restores the legacy sync-every-token loop).
 
     Scripted mode (unit tests): pass ``prefill_fn``/``decode_fn`` —
     host-side callables with no device work:
@@ -106,7 +134,9 @@ class ServeEngine:
       decode_fn(tokens (S,), positions (S,), active (S,) bool) -> (S,)
 
     plus an optional fake ``clock``/``sleep_fn`` pair, which makes the
-    energy accounting exactly computable in tests.
+    energy accounting exactly computable in tests. Scripted mode keeps
+    the legacy one-request-prefill / one-step-decode loop so the exact
+    step windows the energy tests assert against are unchanged.
     """
 
     def __init__(self, c: Optional[ModelConfig] = None,
@@ -114,66 +144,300 @@ class ServeEngine:
                  n_slots: int = 4, max_len: int = 256,
                  impl_prefill: str = "repeat", impl_decode: str = "grouped",
                  donate: bool = True,
+                 cache: str = "slotted", block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 decode_window: int = 8,
+                 paged_impl: str = "xla", paged_interpret: bool = False,
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep_fn: Optional[Callable[[float], None]] = None,
                  power_methods: Sequence = (),
                  watchdog: Optional[StragglerWatchdog] = None):
+        assert cache in ("slotted", "paged"), cache
         self.c, self.params = c, params
         self.n_slots, self.max_len = n_slots, max_len
+        self.cache_kind = cache
+        self.block_size = block_size
+        self._n_blocks = n_blocks
+        self.decode_window = max(int(decode_window), 1)
+        self.paged_impl, self.paged_interpret = paged_impl, paged_interpret
+        self.impl_decode, self.donate = impl_decode, donate
         self.clock = clock
         self.sleep_fn = sleep_fn or time.sleep
         self.power_methods = list(power_methods)
         self.watchdog = watchdog
+        self._decode_idx = 0
         self._scripted = prefill_fn is not None
         if self._scripted:
             self._slot_prefill = prefill_fn
             self._slot_decode = decode_fn
         else:
             assert c is not None and params is not None
+            # legacy fixed-batch generate() programs
             self._prefill = jax.jit(make_prefill_fn(c, impl_prefill))
             decode = make_decode_fn(c, impl_decode)
             self._decode = jax.jit(decode,
                                    donate_argnums=(2,) if donate else ())
             self._grow = jax.jit(grow_caches, static_argnums=(1,))
+            # serve programs: batched prefill returning per-row argmax
+            # first tokens; single-step decode returning next tokens so
+            # fused runs chain the token stream on device
+            def serve_prefill(params, tokens, last_pos):
+                logits, caches, _ = lm.prefill(c, params, tokens,
+                                               impl=impl_prefill,
+                                               last_pos=last_pos)
+                first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                return first, caches
+            self._serve_prefill = jax.jit(serve_prefill)
+
+            def serve_step(params, tok, caches, pos):
+                logits, caches = lm.decode_step(c, params, tok[:, None],
+                                                caches, pos, impl=impl_decode)
+                return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), caches
+            self._serve_step = jax.jit(
+                serve_step, donate_argnums=(2,) if donate else ())
+            self._paged_steps: dict = {}
+            self._paged: Optional[PagedKVCache] = None
             self.caches: Params = None   # allocated on first serve()
 
     # ------------------------------------------------------------------
-    # Model-backed slot operations (continuous policy)
+    # Model-backed cache + program construction
     # ------------------------------------------------------------------
 
-    def _ensure_slotted(self):
-        if self.caches is None:
-            assert self.c.family not in ("encdec", "vlm"), (
-                "continuous batching currently covers decoder-only "
-                "families (dense/moe/ssm/hybrid); encdec/vlm need "
-                "per-request side inputs — use the fixed-batch policy")
+    def _ensure_cache(self):
+        if self.caches is not None:
+            return
+        assert self.c.family not in ("encdec", "vlm"), (
+            "continuous batching currently covers decoder-only "
+            "families (dense/moe/ssm/hybrid); encdec/vlm need "
+            "per-request side inputs — use the fixed-batch policy")
+        if self.cache_kind == "paged":
+            self._paged = PagedKVCache(self.c, self.n_slots, self.max_len,
+                                       self.params,
+                                       block_size=self.block_size,
+                                       n_blocks=self._n_blocks)
+            # the engine takes ownership of the device tree: the jitted
+            # serve programs donate it in place, which would leave the
+            # PagedKVCache attribute pointing at deleted buffers — clear
+            # it so a stale read fails loudly instead
+            self.caches = self._paged.caches
+            self._paged.caches = None
+        else:
             self.caches = slotted_cache(self.c, self.n_slots, self.max_len,
                                         self.params)
 
-    def _model_slot_prefill(self, slot: int, prompt: np.ndarray) -> int:
-        """Prefill one request (batch=1) and insert its KV row at slot.
+    def _paged_step_fn(self, nb: int):
+        """Decode program gathering ``nb`` block-table columns (static —
+        one compiled program per bucket, reused across steps)."""
+        fn = self._paged_steps.get(nb)
+        if fn is None:
+            c = self.c
 
-        Distinct prompt lengths compile distinct prefill programs (pad
-        prompts to shared buckets upstream to avoid that); slot index and
-        cache contents are traced, so refill itself never retraces.
+            def step(params, tok, caches, pos, tables):
+                logits, caches = lm.decode_step(
+                    c, params, tok[:, None], caches, pos,
+                    impl=self.impl_decode, block_tables=tables,
+                    n_kv_blocks=nb, paged_impl=self.paged_impl,
+                    paged_interpret=self.paged_interpret)
+                return (jnp.argmax(logits[:, -1], -1).astype(jnp.int32),
+                        caches)
+
+            fn = jax.jit(step, donate_argnums=(2,) if self.donate else ())
+            self._paged_steps[nb] = fn
+        return fn
+
+    def _nb_bucket(self, n: int) -> int:
+        """Static gather width for ``n`` live blocks: the next power of
+        two, capped at ``max_blocks`` — a handful of compiled programs
+        covers every live-length mix."""
+        cap = self._paged.max_blocks
+        b = 1
+        while b < n and b < cap:
+            b *= 2
+        return min(b, cap)
+
+    def _prompt_bucket(self, n: int) -> int:
+        """Prompt-length bucket for batched prefill.
+
+        Attention-only stacks round up to the next ``block_size``
+        multiple — causal masking hides the pad tokens' KV until decode
+        overwrites it, so coarse buckets are free and cut trace count.
+        Stacks with mamba layers (ssm/hybrid) must prefill at the EXACT
+        prompt length: the SSD recurrence and conv tail run *through*
+        trailing pad tokens and would carry corrupted state into decode
+        (masking protects attention KV only), so each distinct length
+        is its own group (the pre-batching behaviour, still batched
+        across same-length requests). Partial paged blocks are
+        zero-padded by ``insert_paged_rows``.
         """
-        tokens = jnp.asarray(np.asarray(prompt, np.int32))[None, :]
-        logits, row, _enc_kv = self._prefill(self.params, tokens, {})
-        row = self._grow(row, self.max_len)
-        self.caches = insert_slot(self.caches, row, jnp.int32(slot))
-        return int(jnp.argmax(logits[0, -1], -1))
+        if self.c.family in ("ssm", "hybrid"):
+            return n
+        b = -(-n // self.block_size) * self.block_size
+        return min(max(b, self.block_size), self.max_len)
 
-    def _model_slot_decode(self, tokens: np.ndarray, positions: np.ndarray,
-                           active: np.ndarray) -> np.ndarray:
-        """One decode step over the whole slot pool (inactive rows ride
-        along at a dead position; fixed shapes keep it a single trace)."""
-        tok = jnp.asarray(tokens, jnp.int32)[:, None]
-        logits, self.caches = self._decode(
-            self.params, tok, self.caches,
-            jnp.asarray(positions, jnp.int32), None)
-        return np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+    # ------------------------------------------------------------------
+    # Model-backed serve phases
+    # ------------------------------------------------------------------
+
+    def _model_prefill_admitted(self, sched: Scheduler, admitted, results,
+                                steps, ts, ws):
+        """Prefill newly admitted slots as one padded batch per
+        prompt-length bucket; one host fetch returns every first token."""
+        groups: dict[int, list[Slot]] = {}
+        for slot in admitted:
+            bucket = self._prompt_bucket(slot.request.prompt_len)
+            groups.setdefault(bucket, []).append(slot)
+        for bucket, slots in sorted(groups.items()):
+            kp = self.n_slots       # fixed batch: admission never retraces
+            t0 = self.clock()
+            self._sample_power(ts, ws)   # bracket the prefill window
+            tokens = np.zeros((kp, bucket), np.int32)
+            last = np.zeros((kp,), np.int32)
+            slot_ids = np.full((kp,), self.n_slots, np.int32)  # pad: dropped
+            for i, slot in enumerate(slots):
+                plen = slot.request.prompt_len
+                tokens[i, :plen] = np.asarray(slot.request.prompt, np.int32)
+                last[i] = plen - 1
+                slot_ids[i] = slot.index
+            first, rows = self._serve_prefill(self.params,
+                                              jnp.asarray(tokens),
+                                              jnp.asarray(last))
+            if self.cache_kind == "paged":
+                nbk = -(-bucket // self.block_size)
+                blocks = np.full((kp, nbk), self._paged.n_blocks, np.int32)
+                for i, slot in enumerate(slots):
+                    plen = slot.request.prompt_len
+                    self._paged.ensure(slot.index, plen)
+                    own = self._paged.block_ids(slot.index, plen)
+                    blocks[i, :len(own)] = own
+                self.caches = insert_paged_rows(
+                    self.caches, rows, jnp.asarray(blocks),
+                    jnp.asarray(slot_ids), block_size=self.block_size)
+            else:
+                self.caches = insert_rows(self.caches, rows,
+                                          jnp.asarray(slot_ids))
+            first_np = np.asarray(first)      # single batched device fetch
+            t1 = self.clock()
+            self._sample_power(ts, ws)
+            rids = tuple(s.request.rid for s in slots)
+            steps.append(StepRecord("prefill", t0, t1, rids, len(rids)))
+            for i, slot in enumerate(slots):
+                res = results[slot.request.rid]
+                res.slot = slot.index
+                res.admitted_s, res.first_token_s = t0, t1
+                tok = int(first_np[i])
+                res.tokens.append(tok)
+                slot_index = slot.index
+                reason = sched.record_token(slot, tok)
+                if reason is not None:
+                    res.finish_s, res.finish_reason = t1, reason
+                    if self._paged is not None:
+                        self._paged.free(slot_index)
+
+    def _decode_plan(self, sched: Scheduler, active) -> int:
+        """How many decode steps can run before the host must look.
+
+        Fused runs are only taken when the scheduler can PROVE no
+        bookkeeping decision is pending inside the window: no active
+        request can hit EOS (host can't predict it), every active
+        request has at least ``k`` budget left (length finishes land
+        exactly on the window edge), and no admission could happen
+        meanwhile (a free slot plus pending work keeps the legacy
+        per-token cadence so TTFT never pays for throughput).
+        """
+        if self.decode_window <= 1:
+            return 1
+        if (len(active) < self.n_slots and sched.n_pending
+                and sched.policy != "fixed"):
+            # a free slot could refill mid-window — stay per-token so
+            # TTFT never pays for throughput. Under the fixed policy
+            # admission waits for ALL slots to drain, so no window can
+            # overlap an admission and the drain tail fuses too (both
+            # policies run identical programs at identical cadence:
+            # speedup_vs_fixed stays a pure scheduling measurement).
+            return 1
+        if any(s.request.eos_id is not None for s in active):
+            return 1
+        k = min(s.request.max_new_tokens - s.generated for s in active)
+        k = min(k, min(self.max_len - s.pos for s in active))
+        return max(1, min(k, self.decode_window))
+
+    def _model_decode_run(self, sched: Scheduler, active, k: int, results,
+                          steps, ts, ws):
+        """Dispatch ``k`` decode steps with the token stream chained on
+        device, then drain all outputs in one batched fetch."""
+        if self.cache_kind == "paged":
+            for s in active:
+                self._paged.ensure(s.index, s.pos + k)
+            tables = self._paged.device_tables()
+            step = self._paged_step_fn(self._nb_bucket(self._paged.max_owned()))
+            extra = (tables,)
+        else:
+            step = self._serve_step
+            extra = ()
+        tok = jnp.asarray(sched.input_tokens())
+        pos0 = sched.positions()
+        adv = sched.active_mask().astype(np.int32)  # idle rows stay parked
+        rids = tuple(s.request.rid for s in active)
+        t0 = self.clock()
+        self._sample_power(ts, ws)   # bracket the decode window
+        outs = []
+        caches = self.caches
+        for i in range(k):
+            tok, caches = step(self.params, tok, caches,
+                               jnp.asarray(pos0 + i * adv), *extra)
+            try:
+                tok.copy_to_host_async()
+            except AttributeError:   # older jax array types
+                pass
+            outs.append(tok)
+        self.caches = caches
+        outs_np = [np.asarray(o) for o in outs]   # pipeline drain: one sync
+        t1 = self.clock()
+        self._sample_power(ts, ws)
+        if self.watchdog is not None:
+            self.watchdog.observe(self._decode_idx, (t1 - t0) / k)
+        self._decode_idx += 1
+        steps.append(StepRecord("decode", t0, t1, rids * k,
+                                k * len(rids), n_steps=k))
+        for out in outs_np:
+            for s in active:
+                if s.request is None:     # finished at an earlier micro-step
+                    continue
+                res = results[s.request.rid]
+                tok_i = int(out[s.index])
+                res.tokens.append(tok_i)
+                slot_index = s.index
+                reason = sched.record_token(s, tok_i)
+                if reason is not None:
+                    res.finish_s, res.finish_reason = t1, reason
+                    if self._paged is not None:
+                        self._paged.free(slot_index)
+
+    # ------------------------------------------------------------------
+    # Warmup (compile outside any measured window)
+    # ------------------------------------------------------------------
+
+    def warmup(self, prompt_len: int = 8):
+        """Compile every serve program this engine can reach: the
+        prompt-bucket prefill, the insert, and each decode program
+        (every paged gather bucket gets crossed as the warmup requests
+        grow to full slot capacity). Power sampling and the straggler
+        watchdog are detached so warmup never pollutes measurement."""
+        if self._scripted:
+            return
+        budget = max(self.max_len - prompt_len, 1)
+        reqs = [Request(rid=-(i + 1),
+                        prompt=np.zeros(prompt_len, np.int32),
+                        max_new_tokens=budget, arrival_s=0.0)
+                for i in range(self.n_slots)]
+        saved = self.power_methods, self.watchdog
+        self.power_methods, self.watchdog = [], None
+        try:
+            self.serve(reqs, policy="continuous")
+        finally:
+            self.power_methods, self.watchdog = saved
 
     # ------------------------------------------------------------------
     # Continuous-batching run loop
@@ -201,12 +465,8 @@ class ServeEngine:
         are idle, so wall time includes genuine arrival gaps.
         """
         if not self._scripted:
-            self._ensure_slotted()
+            self._ensure_cache()
         sched = Scheduler(self.n_slots, self.max_len, policy=policy)
-        slot_prefill = (self._slot_prefill if self._scripted
-                        else self._model_slot_prefill)
-        slot_decode = (self._slot_decode if self._scripted
-                       else self._model_slot_decode)
         watchdog = self.watchdog
 
         t_start = self.clock()
@@ -220,41 +480,51 @@ class ServeEngine:
         ts: list[float] = []
         ws: list[float] = []
         self._sample_power(ts, ws)
-        decode_idx = 0
 
         while sched.has_work:
             now_rel = self.clock() - t_start
             # -- admission: prefill newly admitted requests ---------------
-            for slot in sched.refill(now_rel):
-                req = slot.request
-                res = results[req.rid]
-                res.slot = slot.index
-                res.admitted_s = self.clock()
-                self._sample_power(ts, ws)   # bracket the prefill window
-                first = slot_prefill(slot.index, req.prompt)
-                t1 = self.clock()
-                self._sample_power(ts, ws)
-                res.first_token_s = t1
-                res.tokens.append(int(first))
-                steps.append(StepRecord("prefill", res.admitted_s, t1,
-                                        (req.rid,), 1))
-                reason = sched.record_token(slot, int(first))
-                if reason is not None:
-                    res.finish_s, res.finish_reason = t1, reason
-            # -- one decode step over all active slots --------------------
+            admitted = sched.refill(now_rel)
+            if admitted and not self._scripted:
+                self._model_prefill_admitted(sched, admitted, results,
+                                             steps, ts, ws)
+            elif admitted:
+                for slot in admitted:
+                    req = slot.request
+                    res = results[req.rid]
+                    res.slot = slot.index
+                    res.admitted_s = self.clock()
+                    self._sample_power(ts, ws)   # bracket the prefill window
+                    first = self._slot_prefill(slot.index, req.prompt)
+                    t1 = self.clock()
+                    self._sample_power(ts, ws)
+                    res.first_token_s = t1
+                    res.tokens.append(int(first))
+                    steps.append(StepRecord("prefill", res.admitted_s, t1,
+                                            (req.rid,), 1))
+                    reason = sched.record_token(slot, int(first))
+                    if reason is not None:
+                        res.finish_s, res.finish_reason = t1, reason
+            # -- decode over all active slots -----------------------------
             active = sched.active_slots()
-            if active:
+            if active and not self._scripted:
+                k = self._decode_plan(sched, active)
+                self._model_decode_run(sched, active, k, results,
+                                       steps, ts, ws)
+            elif active:
                 rids = tuple(s.request.rid for s in active)
                 t0 = self.clock()
                 self._sample_power(ts, ws)   # bracket the decode window
-                out = slot_decode(sched.input_tokens(), sched.positions(),
-                                  sched.active_mask())
+                out = self._slot_decode(sched.input_tokens(),
+                                        sched.positions(),
+                                        sched.active_mask())
                 t1 = self.clock()
                 self._sample_power(ts, ws)
                 if watchdog is not None:
-                    watchdog.observe(decode_idx, t1 - t0)
-                decode_idx += 1
+                    watchdog.observe(self._decode_idx, t1 - t0)
+                self._decode_idx += 1
                 steps.append(StepRecord("decode", t0, t1, rids, len(rids)))
+                out = np.asarray(out)
                 for s in active:
                     res = results[s.request.rid]
                     tok = int(out[s.index])
@@ -276,7 +546,8 @@ class ServeEngine:
             results[rid].energy_wh = wh
         return ServeRunResult(
             results=out_results, steps=steps, sample_ts=ts, sample_ws=ws,
-            summary=serve_summary(out_results, steps, ts, ws),
+            summary=serve_summary(out_results, steps, ts, ws,
+                                  n_slots=self.n_slots),
             straggler_events=list(watchdog.events) if watchdog else [])
 
     # ------------------------------------------------------------------

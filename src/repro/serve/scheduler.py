@@ -49,11 +49,19 @@ class Slot:
 
 @dataclass
 class StepRecord:
-    """One engine step (prefill or decode) for energy attribution.
+    """One engine step window (prefill or decode) for energy attribution.
 
-    ``rids`` are the requests credited with tokens in this window; decode
-    steps credit one token to every active slot, prefill steps credit the
-    single admitted request with its first token.
+    ``rids`` are the request ids credited with tokens in this window,
+    one entry per token: a decode window covering ``n_steps`` fused
+    micro-steps lists every active slot's rid ``n_steps`` times, a
+    (batched) prefill window lists each admitted request once. Energy
+    integrated over the window splits equally across the entries
+    (``core.metrics.attribute_energy``), so per-request attribution
+    stays exact under both batched prefill and fused decode runs.
+
+    ``n_steps`` is the number of decode micro-steps the window fused
+    (1 for prefill and legacy single-step decode) — the denominator for
+    per-step occupancy: ``n_tokens / (n_steps * n_slots)``.
     """
 
     kind: str             # "prefill" | "decode"
@@ -61,6 +69,7 @@ class StepRecord:
     t1: float
     rids: tuple
     n_tokens: int
+    n_steps: int = 1
 
     @property
     def duration_s(self) -> float:
