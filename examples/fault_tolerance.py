@@ -1,5 +1,8 @@
 """Fault-tolerance demo: train, crash mid-run, auto-resume from the atomic
-checkpoint, and plan an elastic rescale after losing devices.
+checkpoint, and plan an elastic rescale after losing devices — driven as
+a WorkloadSpec through the unified bench runner, so the demo's phases are
+ordinary recorded steps (one ResultRecord with crash/resume/rescale
+metrics under artifacts/examples/) instead of hand-rolled script logic.
 
   PYTHONPATH=src python examples/fault_tolerance.py
 """
@@ -9,37 +12,71 @@ import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
+from repro.bench import WorkloadRunner, get_workload, workload
 from repro.ckpt.checkpoint import latest_step
 from repro.ckpt.elastic import plan_rescale
 from repro.configs import SHAPES, get_config
+from repro.core import Space
 from repro.launch.train import main as train_main
 
 
-def main():
-    ckpt = tempfile.mkdtemp()
+@workload(
+    "fault_tolerance",
+    analog="example: crash -> atomic-checkpoint resume -> elastic rescale",
+    space=Space({"fail_at_step": [25]}),
+    tags=("example",),
+    result_columns=["fail_at_step", "crashed_at_ckpt", "resumed_from",
+                    "final_step", "rescale_ok"],
+    primary_metric="final_step",
+)
+def build(pt, ctx):
+    """Injected-failure train + auto-resume + rescale plan."""
+    ckpt = ctx.memo("ft_ckpt_dir", tempfile.mkdtemp)
     base = ["--arch", "gpt-117m", "--preset", "tiny", "--steps", "30",
             "--global-batch", "4", "--seq-len", "64",
             "--ckpt-dir", ckpt, "--ckpt-every", "10"]
 
-    print("== 1. train with an injected failure at step 25")
-    try:
-        train_main(base + ["--fail-at-step", "25"])
-    except RuntimeError as e:
-        print(f"   crashed as injected: {e}")
-    print(f"   latest atomic checkpoint: step {latest_step(ckpt)}")
+    def crash():
+        print("== 1. train with an injected failure at step "
+              f"{pt['fail_at_step']}")
+        try:
+            train_main(base + ["--fail-at-step", str(pt["fail_at_step"])])
+        except RuntimeError as e:
+            print(f"   crashed as injected: {e}")
+        step = latest_step(ckpt)
+        print(f"   latest atomic checkpoint: step {step}")
+        return {"crashed_at_ckpt": step}
 
-    print("== 2. restart with the same command -> auto-resume")
-    res = train_main(base)
-    assert res.resumed_from is not None
-    print(f"   resumed from step {res.resumed_from}, "
-          f"finished at {res.final_step}")
+    def resume():
+        print("== 2. restart with the same command -> auto-resume")
+        res = train_main(base)
+        assert res.resumed_from is not None
+        print(f"   resumed from step {res.resumed_from}, "
+              f"finished at {res.final_step}")
+        return {"resumed_from": res.resumed_from,
+                "final_step": res.final_step}
 
-    print("== 3. elastic rescale plan after losing 32 chips of a 256-pod")
-    c = get_config("granite-8b")
-    plan = plan_rescale(c, SHAPES["train_4k"], (16, 16), lost_devices=32)
-    print(f"   {plan.old_shape} -> {plan.new_shape} ({plan.note})")
-    print("   checkpoints are mesh-agnostic: restore() against the new "
-          "mesh's shardings reshards automatically")
+    def rescale():
+        print("== 3. elastic rescale plan after losing 32 chips of a "
+              "256-pod")
+        c = get_config("granite-8b")
+        plan = plan_rescale(c, SHAPES["train_4k"], (16, 16),
+                            lost_devices=32)
+        print(f"   {plan.old_shape} -> {plan.new_shape} ({plan.note})")
+        print("   checkpoints are mesh-agnostic: restore() against the "
+              "new mesh's shardings reshards automatically")
+        return {"rescale_ok": 1}
+
+    return {"crash": crash, "resume": resume, "rescale": rescale}
+
+
+def main():
+    runner = WorkloadRunner(get_workload("fault_tolerance"),
+                            out_dir="artifacts/examples", power="none")
+    records = runner.run(verbose=False)
+    print("\n== recorded ==")
+    print(runner.result_table())
+    assert all(r.ok for r in records), [r.error for r in records]
 
 
 if __name__ == "__main__":

@@ -1,72 +1,79 @@
 """CARAML-style automated sweep (the paper's core workflow): explore
-(global batch x microbatch) for an LLM with the BenchmarkSuite harness,
-power measurement, constraint filtering, and a final result table +
-heatmap — the JUBE `run -> continue -> result` flow in one script.
+(global batch x microbatch) for an LLM through the unified WorkloadSpec
+API — registry, runner-owned power selection, constraint filtering, and
+a final result table + heatmap — the JUBE `run -> continue -> result`
+flow in one script, with zero hand-rolled runner plumbing.
 
   PYTHONPATH=src python examples/llm_sweep.py
 """
 import pathlib
 import sys
-import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
 
+from repro.bench import WorkloadRunner, get_workload, workload
 from repro.configs import get_config
-from repro.core import (
-    BenchmarkSuite, Runner, Space, Step, divisible_batch, heatmap, table,
-)
+from repro.core import Space, divisible_batch, heatmap
 from repro.data.synthetic import synthetic_tokens
 from repro.models import lm
-from repro.power.methods import RaplPower, TPUModelPower
 from repro.train.optimizer import OptConfig, opt_init
 from repro.train.step import StepConfig, make_train_step
 
 SEQ = 64
 
 
-def main():
+def _setup():
     c = get_config("qwen2-0.5b").reduced(vocab=4096)
     oc = OptConfig(warmup=1, total_steps=100)
     params = lm.init(jax.random.key(0), c)
-    opt_state = opt_init(oc, params)
-    steps = {}
+    return c, oc, params, opt_init(oc, params)
 
-    def bench(pt, ctx):
-        gb, mb = pt["global_batch"], pt["micro_batch"]
-        k = gb // mb
-        if k not in steps:
-            steps[k] = jax.jit(make_train_step(
-                c, oc, StepConfig(microbatches=k)))
-        toks = jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ])
-        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
-        p, o, _ = steps[k](params, opt_state, batch)
-        jax.block_until_ready(p)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            p, o, m = steps[k](params, opt_state, batch)
-        jax.block_until_ready(p)
-        dt = (time.perf_counter() - t0) / 3
-        return {"tokens_per_s": gb * SEQ / dt, "ms_per_step": dt * 1e3}
 
-    space = Space({"global_batch": [8, 16, 32], "micro_batch": [4, 8],
-                   "dp": [1]}, [divisible_batch])
-    suite = BenchmarkSuite(
-        "llm_sweep", space, [Step("train", bench, retries=2)],
-        result_columns=["global_batch", "micro_batch", "tokens_per_s",
-                        "ms_per_step", "train_energy_wh"])
-    rapl = RaplPower()
-    methods = [rapl] if rapl.available() else [TPUModelPower(1, lambda: 1.0)]
-    runner = Runner(suite, power_methods=methods,
-                    out_dir="artifacts/examples")
-    runner.run(verbose=True)
+@workload(
+    "llm_sweep",
+    analog="example: (global batch x microbatch) train-step sweep",
+    space=Space({"global_batch": [8, 16, 32], "micro_batch": [4, 8],
+                 "dp": [1]}, [divisible_batch]),
+    tags=("example",),
+    result_columns=["global_batch", "micro_batch", "tokens_per_s",
+                    "ms_per_step", "energy_wh_per_step", "power_source"],
+    primary_metric="tokens_per_s",
+    heatmap_keys=("micro_batch", "global_batch", "tokens_per_s"),
+)
+def build(pt, ctx):
+    """Example sweep: everything the old BenchmarkSuite version
+    hand-rolled (power pick, warmup/timing, per-k jit cache) is
+    ctx/runner-owned now."""
+    c, oc, params, opt_state = ctx.memo("llm_sweep_state", _setup)
+    gb, mb = pt["global_batch"], pt["micro_batch"]
+    k = gb // mb
+    step = ctx.memo(("llm_sweep_step", k), lambda: jax.jit(
+        make_train_step(c, oc, StepConfig(microbatches=k))))
+    toks = jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ])
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+    def train():
+        m = ctx.measure(lambda: step(params, opt_state, batch)[0])
+        return {"tokens_per_s": gb * SEQ / m.seconds,
+                "ms_per_step": m.ms, "seconds": m.seconds,
+                "energy_wh_per_step": m.energy_wh}
+
+    return {"train": train}
+
+
+def main():
+    spec = get_workload("llm_sweep")
+    runner = WorkloadRunner(spec, out_dir="artifacts/examples",
+                            power="auto", retries=2)
+    records = runner.run(verbose=True)
     print("\n== result table (jube result analog) ==")
     print(runner.result_table())
     print("== tokens/s heatmap (Fig. 4 analog) ==")
-    print(heatmap(runner.records, "micro_batch", "global_batch",
-                  "tokens_per_s"))
+    flat = [r.flat() for r in records if r.ok]
+    print(heatmap(flat, "micro_batch", "global_batch", "tokens_per_s"))
 
 
 if __name__ == "__main__":

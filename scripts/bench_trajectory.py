@@ -39,7 +39,8 @@ from repro.core.results import atomic_write_text  # noqa: E402
 #: headline metrics recorded per point (full deltas stay in the report)
 TRAJECTORY_METRICS = ("decode_tok_s", "tokens_per_s", "images_per_s",
                       "wh_per_token", "occupancy", "speedup_vs_fixed",
-                      "speedup_vs_slotted")
+                      "speedup_vs_slotted", "tok_s_per_device",
+                      "scaling_efficiency", "wh_per_token_scaling")
 
 
 def _num(x):

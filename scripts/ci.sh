@@ -18,13 +18,35 @@ python -m pytest -x -q
 
 # 3. Every smoke-tagged workload end-to-end through the unified CLI on
 #    the deterministic synthetic power backend (multi-device workloads
-#    get their forced host platform via the CLI's XLA_FLAGS re-exec).
+#    get their forced host platform via the CLI's XLA_FLAGS re-exec,
+#    sized to the largest placement in the selected sweeps).
 #    The serve workload's smoke points cover BOTH KV layouts
-#    (cache=slotted and cache=paged) on the XLA paged path.
+#    (cache=slotted and cache=paged) on the XLA paged path; the
+#    llm_train/resnet50/heatmap smoke spaces each include a dp-scaling
+#    cell (placement=dp2 beside dp1), so the sharded execution path and
+#    the derived scaling metrics (tok_s_per_device, scaling_efficiency,
+#    wh_per_token_scaling) are exercised and baseline-gated on every run.
 python -m repro.bench list
 rm -rf artifacts/ci-bench   # no stale results from earlier local runs
 python -m repro.bench run --tags smoke --power synthetic \
     --out artifacts/ci-bench
+
+# 3a. The dp-scaling smoke cells must actually have recorded scaling
+#     metrics — a silent stamping regression would otherwise disarm the
+#     scaling gate while every raw-throughput cell stayed green.
+python - <<'EOF'
+import json, sys
+recs = json.load(open("artifacts/ci-bench/llm_train/results.json"))["records"]
+dp2 = [r for r in recs if r["point"].get("placement") == "dp2"
+       and r["status"] == "ok"]
+missing = [r["point"] for r in dp2
+           if "scaling_efficiency" not in r["metrics"]
+           or "wh_per_token_scaling" not in r["metrics"]]
+if not dp2 or missing:
+    sys.exit(f"dp-scaling smoke cell broken: dp2 cells={len(dp2)} "
+             f"missing scaling metrics={missing}")
+print(f"dp-scaling smoke: {len(dp2)} dp2 cell(s) with scaling metrics")
+EOF
 
 # 3b. Paged decode-attention kernel drill: one serve cell with every
 #     decode step routed through the Pallas kernel in interpret mode on
@@ -38,11 +60,15 @@ REPRO_PAGED_IMPL=pallas-interpret python -m repro.bench run --suite serve \
 
 # 4. Regression gate: the smoke run just produced must not be slower or
 #    hungrier than the committed baselines beyond tolerance. The base
-#    tolerance is widened here (default=0.6) because shared CI hosts are
-#    noisy — the gate is for order-of-magnitude regressions, not 5%
-#    drift; `make bench-compare` runs the tight default gate locally.
-#    Refresh the store after an intentional perf change with
-#    `make bench-promote` and commit artifacts/bench/baselines/.
+#    tolerance is widened here (default=0.45) because shared CI hosts
+#    are noisy — but every workload now stamps same-point measure_split
+#    noise (the serve cells run twice; ctx.measure times two
+#    half-windows; the untimed roofline stamps zero), so the old 0.6
+#    blanket is tighter-able: measured rel_std sits at 0.03-0.15 and the
+#    noise-k widening absorbs per-point wobble. `make bench-compare`
+#    runs the tight default gate locally. Refresh the store after an
+#    intentional perf change with `make bench-promote` and commit
+#    artifacts/bench/baselines/.
 python -m repro.bench compare artifacts/bench/baselines artifacts/ci-bench \
-    --fail-on-regression --fail-on-missing --rel-tol default=0.6 \
+    --fail-on-regression --fail-on-missing --rel-tol default=0.45 \
     --report-out artifacts/ci-bench/compare-report.md

@@ -20,21 +20,22 @@ from repro.bench.compare import (
 from repro.bench.context import Measurement, RunContext
 from repro.bench.records import (
     COMPARED_METRICS, SCHEMA_VERSION, ResultRecord, compare_metrics,
-    load_records, point_key, save_records,
+    load_records, placement_label, point_key, save_records,
+    stamp_scaling_metrics,
 )
-from repro.bench.runner import DeviceCountError, WorkloadRunner
+from repro.bench.runner import WorkloadRunner
 from repro.bench.spec import (
-    UnknownWorkloadError, WorkloadSpec, get_workload, iter_workloads,
-    register, unregister, workload, workload_names,
+    Placement, UnknownWorkloadError, WorkloadSpec, get_workload,
+    iter_workloads, register, unregister, workload, workload_names,
 )
 
 __all__ = [
     "Comparison", "MetricDelta", "PointComparison", "compare_sets",
     "load_result_set", "promote",
     "Measurement", "RunContext", "COMPARED_METRICS", "SCHEMA_VERSION",
-    "ResultRecord", "compare_metrics", "load_records", "point_key",
-    "save_records", "DeviceCountError", "WorkloadRunner",
-    "UnknownWorkloadError", "WorkloadSpec", "get_workload",
+    "ResultRecord", "compare_metrics", "load_records", "placement_label",
+    "point_key", "save_records", "stamp_scaling_metrics", "WorkloadRunner",
+    "Placement", "UnknownWorkloadError", "WorkloadSpec", "get_workload",
     "iter_workloads", "register", "unregister", "workload",
     "workload_names",
 ]

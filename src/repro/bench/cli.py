@@ -13,9 +13,13 @@
 Replaces the old per-benchmark subprocess driver: one process runs every
 selected workload, sharing the jax runtime. Multi-device workloads are
 satisfied by configuring the host platform device count up front —
-in-process where the jax version supports it, otherwise by re-exec'ing
-once with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set
-before the backend initializes.
+sized to the largest mesh any selected point's ``placement`` needs
+(capped at ``REPRO_MAX_LOCAL_DEVICES``, default 8) — in-process where
+the jax version supports it, otherwise by re-exec'ing once with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before the
+backend initializes. A placement beyond the cap is not an error: the
+runner records those points as ``deferred`` with a rendered
+``launch.slurm`` job script sized to the mesh.
 
 Each record also prints the classic ``name,us_per_call,derived`` CSV
 line, so existing log scrapers keep working.
@@ -43,6 +47,18 @@ from repro.core.results import heatmap, table
 
 _REEXEC_MARKER = "REPRO_BENCH_REEXEC"
 _FORCE_FLAG = "--xla_force_host_platform_device_count"
+#: ceiling on forced host-platform devices — a dp64 placement point must
+#: defer to a rendered Slurm job, not fork 64 CPU "devices"
+_LOCAL_DEVICE_CAP_ENV = "REPRO_MAX_LOCAL_DEVICES"
+_LOCAL_DEVICE_CAP = 8
+
+
+def local_device_cap() -> int:
+    try:
+        return int(os.environ.get(_LOCAL_DEVICE_CAP_ENV,
+                                  _LOCAL_DEVICE_CAP))
+    except ValueError:
+        return _LOCAL_DEVICE_CAP
 
 
 def _parse_points(s: Optional[str]) -> Optional[dict]:
@@ -137,7 +153,8 @@ def _render(spec, records) -> None:
 
 def cmd_list(args) -> int:
     specs = _select(args)
-    rows = [{"workload": s.name, "devices": s.n_devices,
+    rows = [{"workload": s.name, "placement": s.placement.label,
+             "devices": s.max_devices(),
              "points": len(s.space),
              "tags": ",".join(sorted(s.tags)),
              "paper_analog": s.analog} for s in specs]
@@ -150,21 +167,36 @@ def cmd_run(args, argv: Sequence[str]) -> int:
     if not specs:
         print("no workloads selected")
         return 0
-    rc = ensure_devices(max(s.n_devices for s in specs), argv)
+    smoke = "smoke" in (_parse_list(args.tags) or [])
+    overrides = _parse_points(args.points)
+
+    def devices_for(s) -> int:
+        try:
+            return s.max_devices(smoke, overrides)
+        except KeyError:
+            # an override axis foreign to this workload fails later with
+            # a precise error; device sizing must not mask it
+            return s.max_devices(smoke)
+
+    needed = max(devices_for(s) for s in specs)
+    rc = ensure_devices(min(needed, local_device_cap()), argv)
     if rc is not None:
         return rc
-    smoke = "smoke" in (_parse_list(args.tags) or [])
     failures = []
     for spec in specs:
         print(f"\n###### {spec.name} — {spec.analog} ######", flush=True)
         runner = WorkloadRunner(
             spec, out_dir=args.out, power=args.power,
             warmup=args.warmup, iters=args.iters, smoke=smoke,
-            point_overrides=_parse_points(args.points),
+            point_overrides=overrides,
             retries=args.retries)
         records = runner.run(verbose=args.verbose)
         _render(spec, records)
         _emit_lines(spec, records)
+        for r in records:
+            if r.status == "deferred":
+                print(f"DEFERRED: {spec.name} {r.point}: "
+                      f"{r.metrics.get('slurm_script', '(no script)')}")
         bad = [r for r in records if r.status == "error"]
         if bad:
             failures.append(spec.name)

@@ -335,11 +335,13 @@ def compare_sets(baseline: List[ResultRecord], current: List[ResultRecord],
                            f"to diff across power sources")
             else:
                 pc.status, pc.note = MISSING, "point absent from current run"
-        elif cur.status == "skipped":
+        elif cur.status in ("skipped", "deferred"):
             # a deliberately skipped point (missing hardware, gated
-            # feature) is absence, not failure — --fail-on-missing governs
+            # feature) — or one deferred to a rendered Slurm job because
+            # its mesh exceeds local devices — is absence, not failure;
+            # --fail-on-missing governs
             pc.status = MISSING
-            pc.note = ("current run skipped this point"
+            pc.note = (f"current run {cur.status} this point"
                        + (f": {cur.error}" if cur.error else ""))
         elif not cur.ok:
             pc.status = REGRESSED

@@ -50,13 +50,19 @@ class RunContext:
     points of a sweep; ``power_methods``/``power_source`` are available
     directly for workloads that orchestrate their own measurement (the
     serve engine samples power synchronously at step boundaries).
+
+    ``placement`` is the resolved device mesh of the point currently
+    building (set by the runner before each ``build`` call); ``mesh()``
+    materializes the matching ``jax.sharding.Mesh`` via ``launch.mesh``,
+    cached per placement so a sweep builds each mesh once.
     """
 
     def __init__(self, *, out_dir="artifacts/bench",
                  power_methods: Sequence[PowerMethod] = (),
                  power_source: str = "none",
                  power_interval_ms: float = 20.0,
-                 warmup: int = 1, iters: int = 3, smoke: bool = False):
+                 warmup: int = 1, iters: int = 3, smoke: bool = False,
+                 placement=None):
         self.out_dir = pathlib.Path(out_dir)
         self.power_methods = list(power_methods)
         self.power_source = power_source
@@ -64,7 +70,9 @@ class RunContext:
         self.warmup = warmup
         self.iters = iters
         self.smoke = smoke
+        self.placement = placement     # repro.bench.spec.Placement | None
         self.cache: dict = {}
+        self._meshes: dict = {}
         self.last_measurement: Optional[Measurement] = None
 
     def memo(self, key, factory: Callable[[], object]):
@@ -72,6 +80,20 @@ class RunContext:
         if key not in self.cache:
             self.cache[key] = factory()
         return self.cache[key]
+
+    def mesh(self, placement=None):
+        """The ``jax.sharding.Mesh`` for ``placement`` (default: the
+        current point's), built once per distinct mesh shape."""
+        placement = placement if placement is not None else self.placement
+        if placement is None:
+            raise RuntimeError("RunContext has no placement — mesh() is "
+                               "only available inside a runner-driven "
+                               "build")
+        key = placement.label
+        if key not in self._meshes:
+            from repro.launch.mesh import mesh_for
+            self._meshes[key] = mesh_for(placement)
+        return self._meshes[key]
 
     def measure(self, fn: Callable, *args, warmup: Optional[int] = None,
                 iters: Optional[int] = None, power: bool = True,

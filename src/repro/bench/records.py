@@ -19,14 +19,26 @@ Schema history
       spread the runner's straggler watchdog observed). v1 documents load
       transparently — the new fields default to "unknown provenance" and
       comparison falls back to the per-metric base tolerance.
+  v3  adds ``placement`` (the device mesh shape by parallelism axis,
+      e.g. ``{"dp": 2, "tp": 2}``) and a ``"deferred"`` status (the mesh
+      exceeded local devices; a rendered SLURM script carries the work).
+      The placement replaces the bare device count in the canonical
+      point key — a dp4 and a dp2tp2 measurement are different points
+      even though both span 4 devices. v1/v2 documents upconvert to
+      pure data parallel (``{"dp": n_devices}``), which is what every
+      pre-placement workload actually ran.
 
 This module also owns the two helpers the cross-run comparison engine
 (:mod:`repro.bench.compare`) joins on: the canonical :func:`point_key`
-and :func:`compare_metrics` extraction with per-metric direction.
+and :func:`compare_metrics` extraction with per-metric direction — plus
+:func:`stamp_scaling_metrics`, which derives the cross-placement scaling
+figures of merit (``tok_s_per_device``, ``scaling_efficiency``,
+``wh_per_token_scaling``) each sweep's records are gated on.
 """
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 from dataclasses import asdict, dataclass, field, fields
 from typing import Optional
@@ -34,7 +46,7 @@ from typing import Optional
 from repro.core.results import atomic_write_text
 from repro.power.frame import Frame
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: metrics the comparison engine understands: name -> (higher_is_better,
 #: default relative tolerance). Anything else a workload emits (structural
@@ -65,6 +77,12 @@ COMPARED_METRICS: dict[str, tuple[bool, float]] = {
     "wh_per_request": (False, 0.25),
     "energy_wh_per_step": (False, 0.25),
     "energy_wh": (False, 0.25),
+    # cross-placement scaling (stamp_scaling_metrics) — per-device
+    # throughput, parallel efficiency vs the 1-device cell of the same
+    # sweep, and the energy-per-token ratio vs that cell
+    "tok_s_per_device": (True, 0.20),
+    "scaling_efficiency": (True, 0.20),
+    "wh_per_token_scaling": (False, 0.25),
 }
 
 
@@ -78,11 +96,24 @@ class ResultRecord:
     power_source: str = "none"
     n_devices: int = 1
     attempts: int = 1
-    status: str = "ok"                 # "ok" | "error" | "skipped"
+    status: str = "ok"            # "ok" | "error" | "skipped" | "deferred"
     error: Optional[str] = None
     git_sha: Optional[str] = None      # commit of the benchmarked tree (v2)
     noise: dict = field(default_factory=dict)  # tolerance inputs (v2)
+    #: device mesh by parallelism axis, e.g. {"dp": 2, "tp": 2} (v3);
+    #: None upconverts to {"dp": n_devices} — pure data parallel is what
+    #: every pre-placement record measured
+    placement: Optional[dict] = None
     schema_version: int = SCHEMA_VERSION
+
+    def __post_init__(self):
+        if self.placement is None:
+            self.placement = {"dp": int(self.n_devices)}
+        else:
+            n = 1
+            for size in self.placement.values():
+                n *= int(size)
+            self.n_devices = n
 
     @property
     def ok(self) -> bool:
@@ -107,6 +138,8 @@ class ResultRecord:
         out.update(self.metrics)
         out.update(power_source=self.power_source, n_devices=self.n_devices,
                    attempts=self.attempts, status=self.status)
+        if "placement" not in out:     # a placement Space axis wins
+            out["placement"] = placement_label(self.placement)
         if self.git_sha:
             out["git_sha"] = self.git_sha
         if self.error:
@@ -147,18 +180,31 @@ class ResultRecord:
             raise ValueError(f"malformed ResultRecord: {e}") from None
 
 
+def placement_label(placement: Optional[dict]) -> str:
+    """Canonical compact spelling of a placement dict (axis-name order
+    insensitive): ``{"tp": 2, "dp": 2}`` -> ``"dp2tp2"``. Delegates to
+    ``spec.Placement`` so records, point keys, sbatch filenames, and
+    Space-axis values all share ONE canonicalization."""
+    from repro.bench.spec import Placement
+    if not placement:
+        return "dp1"
+    return Placement.of(dict(placement)).label
+
+
 def point_key(rec: ResultRecord, *, with_power: bool = True) -> str:
     """Canonical join key for cross-run comparison.
 
     Two records describe the same measurement point iff their workload,
-    Space parameters (order-insensitive), device count — and, unless
+    Space parameters (order-insensitive), device placement (mesh shape
+    by axis, order-insensitive — a dp4 and a dp2tp2 run are different
+    measurements even though both span 4 devices) — and, unless
     ``with_power=False``, power source — agree. The power source is part
     of the key so RAPL-measured and synthetic-modeled energies are never
     silently diffed against each other; the power-stripped variant lets
     the compare engine *detect* that situation and flag it.
     """
     params = ",".join(f"{k}={rec.point[k]}" for k in sorted(rec.point))
-    key = f"{rec.workload}|{params}|ndev={rec.n_devices}"
+    key = f"{rec.workload}|{params}|plc={placement_label(rec.placement)}"
     if with_power:
         key += f"|power={rec.power_source}"
     return key
@@ -175,6 +221,79 @@ def compare_metrics(rec: ResultRecord) -> dict[str, float]:
             except (TypeError, ValueError):
                 continue
     return out
+
+
+#: throughput metrics a sweep's scaling figures derive from, in
+#: preference order (the first one a record carries wins)
+THROUGHPUT_METRICS = ("tokens_per_s", "images_per_s", "decode_tok_s")
+#: energy-efficiency metrics (higher is better) the wh/token scaling
+#: ratio derives from
+EFFICIENCY_METRICS = ("tokens_per_wh", "images_per_wh")
+
+
+def scaling_base_key(rec: ResultRecord) -> tuple:
+    """The join key of a record's own sweep, placement stripped: the
+    1-device cell every scaled cell's efficiency is measured against."""
+    params = tuple(sorted((k, str(v)) for k, v in rec.point.items()
+                          if k != "placement"))
+    return (rec.workload, params, rec.power_source)
+
+
+def stamp_scaling_metrics(records: list) -> None:
+    """Derive the cross-placement scaling metrics for one result set.
+
+    Every ok record with a throughput metric gains ``tok_s_per_device``
+    (throughput / mesh size — the paper's per-accelerator figure);
+    multi-device records whose sweep also measured the 1-device cell of
+    the same point gain ``scaling_efficiency`` (per-device throughput
+    relative to 1 device: 1.0 = linear scaling) and
+    ``wh_per_token_scaling`` (energy per token relative to 1 device:
+    1.0 = energy parity, above = each token costs more at scale). All
+    three are in ``COMPARED_METRICS``, so a scaling collapse gates the
+    compare engine even when the raw throughput cell stays green.
+    """
+    ones = {}
+    for r in records:
+        if r.ok and r.n_devices == 1:
+            ones.setdefault(scaling_base_key(r), r)
+    for r in records:
+        if not r.ok:
+            continue
+        tp_name = next((m for m in THROUGHPUT_METRICS if m in r.metrics),
+                       None)
+        if tp_name is None:
+            continue
+        try:
+            tp = float(r.metrics[tp_name])
+        except (TypeError, ValueError):
+            continue
+        if not math.isfinite(tp):
+            continue
+        n = max(r.n_devices, 1)
+        r.metrics.setdefault("tok_s_per_device", tp / n)
+        if n == 1:
+            continue
+        base = ones.get(scaling_base_key(r))
+        if base is None:
+            continue
+        try:
+            base_tp = float(base.metrics.get(tp_name))
+        except (TypeError, ValueError):
+            continue
+        if math.isfinite(base_tp) and base_tp > 0.0:
+            r.metrics["scaling_efficiency"] = (tp / n) / base_tp
+        eff_name = next((m for m in EFFICIENCY_METRICS
+                         if m in r.metrics and m in base.metrics), None)
+        if eff_name is None:
+            continue
+        try:
+            cur_eff = float(r.metrics[eff_name])
+            base_eff = float(base.metrics[eff_name])
+        except (TypeError, ValueError):
+            continue
+        if all(math.isfinite(v) and v > 0.0 for v in (cur_eff, base_eff)):
+            # (Wh/token at n devices) / (Wh/token at 1) == eff_1 / eff_n
+            r.metrics["wh_per_token_scaling"] = base_eff / cur_eff
 
 
 def metric_direction(name: str) -> bool:

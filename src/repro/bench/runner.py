@@ -6,35 +6,37 @@ preset / ``--points`` overrides applied), select the power backend once
 (RAPL -> TPU-model -> synthetic, labeled), call ``spec.build`` per point,
 run each returned step thunk with retries and straggler detection, and
 persist normalized ``ResultRecord``s incrementally + a manifest.
+
+Placement-aware: each point resolves its device mesh via
+``spec.placement_for`` (the ``placement`` Space axis, else the spec
+default). The runner hands the resolved :class:`~repro.bench.spec.Placement`
+to the build through ``ctx.placement``/``ctx.mesh()``, sizes the power
+backend to the point's mesh (per-device attribution: a dp4 cell is
+billed four devices' watts, not one), and stamps the cross-placement
+scaling metrics (``records.stamp_scaling_metrics``) into every sweep.
+A point whose mesh exceeds the local device count is not an error: the
+runner renders a ``launch.slurm`` job script sized to the mesh and
+records the point as ``deferred`` — the sweep's local cells still
+measure, and the script carries the oversized cell to the cluster.
 """
 from __future__ import annotations
 
 import math
 import pathlib
+import re
 import time
 from typing import Optional, Sequence
 
 from repro.bench.context import RunContext
-from repro.bench.records import ResultRecord, save_records
-from repro.bench.spec import WorkloadSpec
+from repro.bench.records import (
+    ResultRecord, save_records, stamp_scaling_metrics,
+)
+from repro.bench.spec import Placement, WorkloadSpec
 from repro.core.manifest import git_sha, write_manifest
 from repro.core.results import table
 from repro.core.runner import StragglerWatchdog, run_attempts
+from repro.launch.slurm import render_bench_job
 from repro.power.methods import PowerMethod, select_power_methods
-
-
-class DeviceCountError(RuntimeError):
-    """The workload needs more jax devices than this process has."""
-
-    def __init__(self, spec: WorkloadSpec, have: int):
-        super().__init__(
-            f"workload {spec.name!r} needs {spec.n_devices} devices, "
-            f"process has {have}; run via `python -m repro.bench run` "
-            f"(which forces a host platform device count) or set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{spec.n_devices}")
-        self.spec = spec
-        self.have = have
 
 
 class WorkloadRunner:
@@ -50,35 +52,47 @@ class WorkloadRunner:
                  power_interval_ms: float = 20.0):
         self.spec = spec
         self.out = pathlib.Path(out_dir) / spec.name
-        if power_methods is not None:
+        self.smoke = smoke
+        self.point_overrides = point_overrides
+        self._power_arg = power
+        self._power_injected = power_methods is not None
+        self._power_by_n: dict[int, list] = {}
+        if self._power_injected:
             self.power_methods = list(power_methods)
             self.power_source = power_source or (
                 self.power_methods[0].name if self.power_methods else "none")
         else:
+            n = spec.max_devices(smoke, point_overrides)
             self.power_methods, self.power_source = select_power_methods(
-                power, n_devices=spec.n_devices)
+                power, n_devices=n)
+            self._power_by_n[n] = self.power_methods
         self.warmup = warmup
         self.iters = iters
-        self.smoke = smoke
-        self.point_overrides = point_overrides
         self.retries = retries
         self.power_interval_ms = power_interval_ms
         self.watchdog = StragglerWatchdog()
         self.records: list[ResultRecord] = []
 
-    def _check_devices(self) -> None:
-        import jax
-        have = jax.device_count()
-        if have < self.spec.n_devices:
-            raise DeviceCountError(self.spec, have)
+    def _power_for(self, n_devices: int) -> list:
+        """Power methods sized to one point's mesh — per-device energy
+        attribution for placement sweeps. Injected methods (tests, a
+        caller-owned scope) are used as-is."""
+        if self._power_injected:
+            return self.power_methods
+        if n_devices not in self._power_by_n:
+            self._power_by_n[n_devices], _ = select_power_methods(
+                self._power_arg, n_devices=n_devices)
+        return self._power_by_n[n_devices]
 
     def run(self, verbose: bool = True) -> list[ResultRecord]:
         spec = self.spec
-        self._check_devices()
         self.out.mkdir(parents=True, exist_ok=True)
         write_manifest(self.out, {
             "workload": spec.name, "analog": spec.analog,
-            "n_devices": spec.n_devices, "tags": sorted(spec.tags),
+            "placement": spec.placement.label,
+            "max_devices": spec.max_devices(self.smoke,
+                                            self.point_overrides),
+            "tags": sorted(spec.tags),
             "power_source": self.power_source, "smoke": self.smoke,
         })
         ctx = RunContext(out_dir=self.out,
@@ -94,16 +108,57 @@ class WorkloadRunner:
             if verbose:
                 print(f"[{spec.name}] {i + 1}/{len(points)} {rec.flat()}",
                       flush=True)
+            # scaling metrics join cells ACROSS the sweep (each scaled
+            # cell against its 1-device twin), so re-derive over the
+            # whole record list before each incremental save
+            stamp_scaling_metrics(self.records)
             save_records(self.records, self.out)
         return self.records
+
+    def _defer_point(self, pt: dict, placement: Placement,
+                     rec: ResultRecord, have: int) -> ResultRecord:
+        """Render the Slurm script that carries an oversized mesh to the
+        cluster; the record keeps the sweep's bookkeeping honest."""
+        # one script PER POINT (the placement label alone would let
+        # same-mesh cells of a sweep clobber each other), forwarding
+        # this run's power/out/warmup/iters so the cluster record joins
+        # the local result set by point key
+        slug = "_".join(f"{k}{pt[k]}" for k in sorted(pt)
+                        if k != "placement")
+        slug = re.sub(r"[^A-Za-z0-9._-]+", "-", slug)
+        name = f"{self.spec.name}_{placement.label}" + (f"_{slug}" if slug
+                                                        else "")
+        power = self._power_arg if not self._power_injected \
+            else self.power_source
+        script = render_bench_job(workload=self.spec.name,
+                                  placement=placement, point=pt,
+                                  out=str(self.out.parent), power=power,
+                                  warmup=self.warmup, iters=self.iters,
+                                  job_suffix=f"_{slug}" if slug else "")
+        path = self.out / "slurm" / f"{name}.sbatch"
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(script)
+        rec.status = "deferred"
+        rec.error = (f"mesh {placement.label} needs {placement.n_devices} "
+                     f"devices, process has {have}; sbatch script rendered "
+                     f"to {path}")
+        rec.metrics["slurm_script"] = str(path)
+        return rec
 
     def _run_point(self, pt: dict, ctx: RunContext) -> ResultRecord:
         spec = self.spec
         ctx.last_measurement = None
+        placement = spec.placement_for(pt)
         rec = ResultRecord(workload=spec.name, point=dict(pt),
                            power_source=self.power_source,
-                           n_devices=spec.n_devices,
+                           placement=placement.dict(),
                            git_sha=git_sha())
+        import jax
+        have = jax.device_count()
+        if placement.n_devices > have:
+            return self._defer_point(pt, placement, rec, have)
+        ctx.placement = placement
+        ctx.power_methods = self._power_for(placement.n_devices)
         t0 = time.perf_counter()
         ok, step_fns, attempts = run_attempts(
             "build", lambda: spec.build(pt, ctx), self.retries,

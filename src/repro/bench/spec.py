@@ -1,22 +1,37 @@
 """WorkloadSpec — the benchmark-facing declarative API.
 
 A workload is one paper table/figure: a name, its paper analog, a
-parameter ``Space``, the device count it needs, selection tags, and a
-``build(point, ctx) -> {step_name: thunk}`` factory. Registration via the
-``@workload`` decorator puts it in the global registry that the single
-CLI (``python -m repro.bench``) and ``WorkloadRunner`` drive — the suite
-half of CARAML's "compact, automated, extensible, reproducible" claim.
+parameter ``Space``, the device mesh it needs (a :class:`Placement`),
+selection tags, and a ``build(point, ctx) -> {step_name: thunk}``
+factory. Registration via the ``@workload`` decorator puts it in the
+global registry that the single CLI (``python -m repro.bench``) and
+``WorkloadRunner`` drive — the suite half of CARAML's "compact,
+automated, extensible, reproducible" claim.
 
 ``build`` is called once per expanded point with a ``RunContext`` and
 returns an ordered mapping of named zero-arg step thunks, each producing
 a metrics dict. Cross-point state (configs, params, jitted programs)
 lives in ``ctx.memo`` so sweeps compile once; timing/energy plumbing is
 ``ctx.measure`` — owned by the runner, not the workload.
+
+Placement
+---------
+CARAML's headline measurement is how throughput *and* energy scale as a
+workload spreads across more accelerators, so device placement is a
+first-class sweep dimension, not a scalar: a :class:`Placement` names a
+mesh shape by parallelism axis (``{"dp": 4}``, ``{"dp": 2, "tp": 2}``,
+``{"pp": 4}``). A workload declares its default placement on the spec
+(scalar ``n_devices`` ints still accepted and upconverted to pure data
+parallel) and may additionally expose ``placement`` as an ordinary
+``Space`` axis — a scaling sweep is then just another axis of the point
+space, and the runner resolves each point's mesh via
+:meth:`WorkloadSpec.placement_for`.
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional, Union
 
 from repro.core.params import Space
 
@@ -27,6 +42,114 @@ BuildFn = Callable[[dict, "object"], StepFns]
 #: tags with agreed meaning; workloads may add their own on top.
 KNOWN_TAGS = ("smoke", "full", "train", "serve", "vision", "kernels",
               "analysis")
+
+#: placement axis -> jax mesh axis name (the names the sharding rules in
+#: repro.parallel.sharding key on; unknown axes pass through unchanged)
+MESH_AXIS_NAMES = {"dp": "data", "tp": "model", "pp": "stage", "pod": "pod"}
+#: canonical placement axis order — fixes the mesh's device-major order
+#: (lowest-bandwidth/lowest-frequency collective axes first) and makes
+#: every spelling of the same mesh produce one canonical label
+_AXIS_ORDER = ("pod", "dp", "tp", "pp")
+
+_PLACEMENT_RE = re.compile(r"([a-zA-Z]+)\s*=?\s*(\d+)")
+
+
+@dataclass(frozen=True)
+class Placement:
+    """A device mesh shape, named by parallelism axis.
+
+    ``axes`` is a canonically-ordered tuple of ``(axis, size)`` pairs —
+    construct through :meth:`of`, which normalizes every accepted
+    spelling (int, ``"dp2tp2"``-style label, dict, Placement) to the
+    same value, so placements compare/hash by meaning, not by spelling.
+    """
+
+    axes: tuple  # ((axis, size), ...) in canonical axis order
+
+    @classmethod
+    def of(cls, value: Union[int, str, dict, "Placement", None],
+           ) -> "Placement":
+        """Normalize any accepted placement spelling.
+
+        int ``n`` -> pure data parallel ``{"dp": n}`` (the scalar
+        ``n_devices`` upconversion); str -> parsed label (``"dp4"``,
+        ``"dp2tp2"``, ``"dp=2,tp=2"``); dict -> axis sizes.
+        """
+        if isinstance(value, Placement):
+            return value
+        if value is None:
+            value = 1
+        if isinstance(value, int):
+            if value < 1:
+                raise ValueError(f"placement needs >= 1 device, got {value}")
+            value = {"dp": value}
+        if isinstance(value, str):
+            pairs = _PLACEMENT_RE.findall(value)
+            if not pairs or "".join(a + n for a, n in pairs) != re.sub(
+                    r"[\s,=]", "", value):
+                raise ValueError(
+                    f"cannot parse placement {value!r}; expected e.g. "
+                    f"'dp4', 'dp2tp2', or 'dp=2,tp=2'")
+            value = {}
+            for a, n in pairs:
+                if a in value:
+                    raise ValueError(f"placement {pairs} repeats axis {a!r}")
+                value[a] = int(n)
+        if not isinstance(value, dict) or not value:
+            raise TypeError(f"cannot interpret placement from "
+                            f"{type(value).__name__}: {value!r}")
+        for a, n in value.items():
+            if not isinstance(n, int) or n < 1:
+                raise ValueError(f"placement axis {a!r} must be a positive "
+                                 f"int, got {n!r}")
+        order = {a: i for i, a in enumerate(_AXIS_ORDER)}
+        names = sorted(value, key=lambda a: (order.get(a, len(order)), a))
+        return cls(axes=tuple((a, int(value[a])) for a in names))
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for _, size in self.axes:
+            n *= size
+        return n
+
+    @property
+    def label(self) -> str:
+        """Canonical compact spelling, e.g. ``"dp2tp2"`` — the value a
+        ``placement`` Space axis carries and the point-key component."""
+        return "".join(f"{a}{n}" for a, n in self.axes)
+
+    def dict(self) -> dict:
+        return dict(self.axes)
+
+    def _mesh_entries(self) -> tuple:
+        """(jax axis name, size) pairs. The "data" and "model" axes are
+        always present (size 1 when the placement doesn't use them) —
+        the table-driven sharding rules in ``repro.parallel.sharding``
+        name them unconditionally, and a size-1 axis is a free no-op."""
+        sizes = self.dict()
+        entries = []
+        if "pod" in sizes:
+            entries.append(("pod", sizes.pop("pod")))
+        entries.append(("data", sizes.pop("dp", 1)))
+        entries.append(("model", sizes.pop("tp", 1)))
+        if "pp" in sizes:
+            entries.append(("stage", sizes.pop("pp")))
+        for a in sorted(sizes):     # unknown axes pass through by name
+            entries.append((MESH_AXIS_NAMES.get(a, a), sizes[a]))
+        return tuple(entries)
+
+    @property
+    def mesh_shape(self) -> tuple:
+        return tuple(n for _, n in self._mesh_entries())
+
+    @property
+    def mesh_axes(self) -> tuple:
+        """jax mesh axis names (duck-typed by ``launch.mesh.mesh_for``)."""
+        return tuple(a for a, _ in self._mesh_entries())
+
+    def __str__(self) -> str:
+        return self.label
 
 
 class UnknownWorkloadError(KeyError):
@@ -50,7 +173,8 @@ class WorkloadSpec:
     analog: str                       # the paper table/figure it reproduces
     space: Space                      # full-run parameter space
     build: BuildFn
-    n_devices: int = 1                # jax devices the workload requires
+    #: default device mesh; a ``placement`` Space axis overrides per point
+    placement: Placement = Placement.of(1)
     tags: frozenset = frozenset()
     smoke_axes: Optional[dict] = None  # axis overrides for smoke runs
     result_columns: Optional[list] = None
@@ -62,6 +186,25 @@ class WorkloadSpec:
     #: stamps these into each record so `compare` needs no registry.
     compare_tols: Optional[dict] = None
     description: str = ""
+
+    @property
+    def n_devices(self) -> int:
+        """Device floor of the default placement (scalar back-compat)."""
+        return self.placement.n_devices
+
+    def placement_for(self, pt: dict) -> Placement:
+        """The resolved mesh for one expanded point: the ``placement``
+        axis when the Space carries one, else the spec default."""
+        return Placement.of(pt.get("placement", self.placement))
+
+    def max_devices(self, smoke: bool = False,
+                    overrides: Optional[dict] = None) -> int:
+        """Largest device count any point of the selected space needs —
+        what the CLI sizes the forced host platform to."""
+        points = self.space_for(smoke, overrides).expand()
+        if not points:
+            return self.placement.n_devices
+        return max(self.placement_for(pt).n_devices for pt in points)
 
     def space_for(self, smoke: bool = False,
                   overrides: Optional[dict] = None) -> Space:
@@ -94,18 +237,30 @@ def register(spec: WorkloadSpec) -> WorkloadSpec:
     return spec
 
 
-def workload(name: str, *, analog: str, space: Space, n_devices: int = 1,
+def workload(name: str, *, analog: str, space: Space,
+             placement: Union[int, str, dict, Placement, None] = None,
+             n_devices: Optional[int] = None,
              tags: Iterable[str] = (), smoke: Optional[dict] = None,
              result_columns: Optional[list] = None,
              primary_metric: Optional[str] = None,
              heatmap_keys: Optional[tuple] = None,
              compare_tols: Optional[dict] = None):
-    """Decorator: register ``build(point, ctx)`` as a WorkloadSpec."""
+    """Decorator: register ``build(point, ctx)`` as a WorkloadSpec.
+
+    ``placement`` names the default device mesh (``{"dp": 2, "tp": 2}``,
+    ``"pp4"``, ...); the legacy scalar ``n_devices`` keyword upconverts
+    to pure data parallel. Passing both is a contradiction and rejected.
+    """
+    if placement is not None and n_devices is not None:
+        raise ValueError(f"workload {name!r}: pass placement OR n_devices, "
+                         f"not both")
 
     def deco(build: BuildFn) -> WorkloadSpec:
         return register(WorkloadSpec(
             name=name, analog=analog, space=space, build=build,
-            n_devices=n_devices, tags=frozenset(tags), smoke_axes=smoke,
+            placement=Placement.of(n_devices if placement is None
+                                   else placement),
+            tags=frozenset(tags), smoke_axes=smoke,
             result_columns=result_columns, primary_metric=primary_metric,
             heatmap_keys=heatmap_keys, compare_tols=compare_tols,
             description=(build.__doc__ or "").strip().splitlines()[0]

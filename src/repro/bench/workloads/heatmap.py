@@ -4,26 +4,31 @@ report renders them as OOM, like the paper's figure).
 
 This is the ablation-automation CARAML's JUBE layer provides: the Space
 constraints encode the paper's "global batch not divisible by
-micro_batch x dp" exclusion. The CLI forces a >=8-device host platform
-before the backend initializes.
+micro_batch x dp" exclusion. The data-parallel degree is the standard
+``placement`` axis (``dp1``..``dp8``), so the CLI sizes the forced host
+platform from the sweep itself and the runner derives the scaling
+metrics against the dp1 column.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.bench.spec import workload
+from repro.bench.spec import Placement, workload
 from repro.configs import get_config
 from repro.core.metrics import tokens_per_s
-from repro.core.params import Space, divisible_batch
+from repro.core.params import Space
 from repro.data.synthetic import synthetic_tokens
-from repro.launch.mesh import make_mesh
 from repro.models import lm
+from repro.parallel import sharding as shd
 from repro.train.optimizer import OptConfig, opt_init
 from repro.train.step import StepConfig, make_train_step
 
 SEQ = 64
+
+
+def _dp(pt) -> int:
+    return Placement.of(pt["placement"]).n_devices
 
 
 def _setup():
@@ -36,38 +41,42 @@ def _setup():
     return c, oc, params, opt_state
 
 
-def _dp_step(ctx, dp: int):
+def _dp_step(ctx):
+    placement = ctx.placement
+
     def make():
         c, oc, _, _ = ctx.memo("heatmap", _setup)
-        mesh = make_mesh((dp,), ("data",))
-        bsh = NamedSharding(mesh, P("data"))
-        return jax.jit(make_train_step(c, oc, StepConfig())), bsh
+        plan = shd.make_dp_plan(ctx.mesh())
+        return jax.jit(make_train_step(c, oc, StepConfig())), plan
 
-    return ctx.memo(("heatmap_dp", dp), make)
+    return ctx.memo(("heatmap_dp", placement.label), make)
 
 
 @workload(
     "heatmap",
     analog="Fig. 4 (dp x global-batch throughput heatmap)",
-    space=Space({"dp": [1, 2, 4, 8], "global_batch": [8, 16, 32],
+    space=Space({"placement": ["dp1", "dp2", "dp4", "dp8"],
+                 "global_batch": [8, 16, 32],
                  "micro_batch": [1]},
-                [divisible_batch,
-                 lambda pt: pt["global_batch"] >= pt["dp"]]),
-    smoke={"dp": [1, 2], "global_batch": [8]},
-    n_devices=8,
+                [lambda pt: pt["global_batch"] % (pt["micro_batch"]
+                                                  * _dp(pt)) == 0,
+                 lambda pt: pt["global_batch"] >= _dp(pt)]),
+    smoke={"placement": ["dp1", "dp2"], "global_batch": [8]},
     tags=("train", "smoke", "full"),
-    result_columns=["dp", "global_batch", "tokens_per_s", "ms",
+    result_columns=["placement", "global_batch", "tokens_per_s",
+                    "tok_s_per_device", "scaling_efficiency", "ms",
                     "power_source"],
     primary_metric="tokens_per_s",
-    heatmap_keys=("dp", "global_batch", "tokens_per_s"),
+    heatmap_keys=("placement", "global_batch", "tokens_per_s"),
 )
 def build(pt, ctx):
     """dp x batch train-step sweep (paper Fig. 4)."""
     c, oc, params, opt_state = ctx.memo("heatmap", _setup)
-    step, bsh = _dp_step(ctx, pt["dp"])
+    step, plan = _dp_step(ctx)
     gb = pt["global_batch"]
     toks = jax.device_put(
-        jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ]), bsh)
+        jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ]),
+        shd.batch_sharding(plan, (gb, SEQ)))
     batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
 
     def run():

@@ -1,8 +1,17 @@
-"""Paper Fig. 2 analog: LLM training throughput + energy vs global batch.
+"""Paper Fig. 2 analog: LLM training throughput + energy vs global batch,
+swept across device placements (the CARAML scaling measurement).
 
 Trains the paper's GPT decoder (reduced for the host under test) across a
-global-batch sweep; reports tokens/s, energy/step, tokens/Wh — CARAML's
-LLM figures of merit.
+global-batch x placement sweep; reports tokens/s, energy/step, tokens/Wh —
+CARAML's LLM figures of merit — plus the cross-placement scaling metrics
+the runner derives (tok_s_per_device, scaling_efficiency,
+wh_per_token_scaling against the dp1 cell of the same sweep).
+
+The ``placement`` axis is real sharded execution, not bookkeeping: each
+cell builds a ``parallel.sharding.Plan`` from its mesh, places
+params/optimizer-state with the table-driven TP/FSDP/ZeRO-1 rules,
+shards the batch over the data axes, and constrains the micro-batch
+gradient accumulator so GSPMD reduce-scatters instead of all-reducing.
 """
 from __future__ import annotations
 
@@ -11,44 +20,92 @@ import jax.numpy as jnp
 
 from repro.bench.spec import workload
 from repro.configs import get_config
+from repro.configs.base import ShapeConfig
 from repro.core.metrics import tokens_per_s
 from repro.core.params import Space
 from repro.data.synthetic import synthetic_tokens
 from repro.models import lm
+from repro.parallel import sharding as shd
 from repro.train.optimizer import OptConfig, opt_init
 from repro.train.step import StepConfig, make_train_step
 
+MICROBATCHES = 4
 
-def _setup(arch: str):
-    c = get_config(arch).reduced(d_model=128, n_layers=4, d_ff=512,
-                                 vocab=8192, n_heads=4, n_kv_heads=4,
-                                 d_head=32)
-    oc = OptConfig(warmup=2, total_steps=1000)
-    params = lm.init(jax.random.key(0), c)
-    opt_state = opt_init(oc, params)
-    step = jax.jit(make_train_step(c, oc, StepConfig(microbatches=4)))
-    return c, params, opt_state, step
+
+def _base_state(ctx, arch: str):
+    """Unsharded model/optimizer state, built once per arch; every
+    placement cell places a copy of this onto its own mesh."""
+    def make():
+        c = get_config(arch).reduced(d_model=128, n_layers=4, d_ff=512,
+                                     vocab=8192, n_heads=4, n_kv_heads=4,
+                                     d_head=32)
+        oc = OptConfig(warmup=2, total_steps=1000)
+        params = lm.init(jax.random.key(0), c)
+        opt_state = opt_init(oc, params)
+        return c, oc, params, opt_state
+
+    return ctx.memo(("llm_train", arch), make)
+
+
+def _placed_state(ctx, arch: str):
+    """Mesh-placed train state, once per (arch, placement) — the placed
+    params + full AdamW state are ~5x model bytes, so they must not be
+    duplicated per batch-size cell."""
+    placement = ctx.placement
+
+    def make():
+        c, oc, params, opt_state = _base_state(ctx, arch)
+        plan = shd.make_plan(c, ctx.mesh(),
+                             ShapeConfig("bench", 0, 0, "train"))
+        params_s, opt_s, psh, _ = shd.shard_train_state(
+            plan, params, opt_state, c)
+        return c, oc, plan, params_s, opt_s, psh
+
+    return ctx.memo(("llm_train_placed", arch, placement.label), make)
+
+
+def _placed(ctx, pt):
+    """Placed state + the cell's jitted step (only the step — via its
+    batch shardings — depends on the cell's shapes)."""
+    arch, gb, seq = pt["arch"], pt["global_batch"], pt["seq"]
+    c, oc, plan, params_s, opt_s, psh = _placed_state(ctx, arch)
+
+    def make_step():
+        mb = gb // MICROBATCHES
+        bsh = {"tokens": shd.batch_sharding(plan, (mb, seq)),
+               "labels": shd.batch_sharding(plan, (mb, seq))}
+        return jax.jit(make_train_step(
+            c, oc, StepConfig(microbatches=MICROBATCHES),
+            grad_shardings=psh, batch_shardings=bsh))
+
+    step = ctx.memo(("llm_train_step", arch, ctx.placement.label, gb, seq),
+                    make_step)
+    return c, plan, params_s, opt_s, step
 
 
 @workload(
     "llm_train",
-    analog="Fig. 2 (LLM tokens/s + energy vs global batch)",
+    analog="Fig. 2 (LLM tokens/s + energy vs global batch, dp-scaled)",
     space=Space({"arch": ["gpt-800m"], "global_batch": [16, 32, 64],
-                 "seq": [128]}),
-    smoke={"global_batch": [8], "seq": [64]},
+                 "seq": [128], "placement": ["dp1", "dp2", "dp4"]}),
+    smoke={"global_batch": [8], "seq": [64], "placement": ["dp1", "dp2"]},
     tags=("train", "smoke", "full"),
-    result_columns=["arch", "global_batch", "seq", "tokens_per_s",
-                    "ms_per_step", "energy_wh_per_step", "tokens_per_wh",
-                    "power_source"],
+    result_columns=["arch", "global_batch", "seq", "placement",
+                    "tokens_per_s", "tok_s_per_device",
+                    "scaling_efficiency", "ms_per_step",
+                    "energy_wh_per_step", "tokens_per_wh",
+                    "wh_per_token_scaling", "power_source"],
     primary_metric="tokens_per_s",
 )
 def build(pt, ctx):
-    """LLM train-step sweep over global batch size."""
-    c, params, opt_state, step = ctx.memo(
-        ("llm_train", pt["arch"]), lambda: _setup(pt["arch"]))
+    """LLM train-step sweep over global batch x device placement."""
+    c, plan, params, opt_state, step = _placed(ctx, pt)
     gb, seq = pt["global_batch"], pt["seq"]
     toks = jnp.asarray(synthetic_tokens(gb, seq, c.vocab)[:, :seq])
     batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    batch = jax.device_put(
+        batch, {k: shd.batch_sharding(plan, v.shape)
+                for k, v in batch.items()})
 
     def train():
         p, o = params, opt_state

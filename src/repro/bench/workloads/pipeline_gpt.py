@@ -3,7 +3,9 @@
 The Graphcore case: the model's layers split over 4 devices (pipeline
 parallelism was the only way it fit in per-tile SRAM), throughput in
 tokens/s across a batch sweep, plus the pipeline-bubble overhead. The
-CLI forces a >=4-device host platform before the backend initializes.
+workload declares a ``{"pp": 4}`` placement — its stages map onto the
+mesh's pipeline axis — and the CLI forces a matching host platform
+before the backend initializes.
 """
 from __future__ import annotations
 
@@ -43,16 +45,22 @@ def _layer_fn(c):
     return layer_fn
 
 
-def _setup():
+def _setup(ctx=None):
     c = get_config("gpt-117m").reduced(n_layers=8, d_model=128, d_ff=512,
                                        n_heads=4, n_kv_heads=4, d_head=32,
                                        vocab=4096)
-    mesh = make_mesh((N_STAGES,), ("stage",))
+    # the workload's {"pp": N} placement materializes as the mesh's
+    # "stage" axis (spec.MESH_AXIS_NAMES); standalone callers (tests)
+    # fall back to building the same mesh directly
+    mesh = ctx.mesh() if ctx is not None else make_mesh((N_STAGES,),
+                                                        ("stage",))
+    stage_axis = "stage" if "stage" in mesh.axis_names \
+        else mesh.axis_names[0]
     params = lm.init(jax.random.key(0), c)
     stage_params = stage_params_split(params["layers"], N_STAGES)
     layer_fn = _layer_fn(c)
     fwd = jax.jit(lambda sp, xs: pipeline_forward(
-        mesh, "stage", layer_fn, sp, xs))
+        mesh, stage_axis, layer_fn, sp, xs))
     return c, params, stage_params, fwd
 
 
@@ -83,7 +91,7 @@ def verify_pipeline_correctness():
     analog="Table II (pipeline-parallel GPT-117M tokens/s)",
     space=Space({"global_batch": [16, 32, 64]}),
     smoke={"global_batch": [16]},
-    n_devices=N_STAGES,
+    placement={"pp": N_STAGES},
     tags=("train", "smoke", "full"),
     result_columns=["global_batch", "tokens_per_s", "ms_per_iter",
                     "energy_wh", "tokens_per_wh", "bubble_fraction",
@@ -92,7 +100,8 @@ def verify_pipeline_correctness():
 )
 def build(pt, ctx):
     """Pipeline-parallel forward sweep over global batch size."""
-    c, params, stage_params, fwd = ctx.memo("pipeline_gpt", _setup)
+    c, params, stage_params, fwd = ctx.memo("pipeline_gpt",
+                                            lambda: _setup(ctx))
     gb = pt["global_batch"]
     mb = gb // N_MICROBATCH
     toks = jnp.asarray(synthetic_tokens(gb, SEQ, c.vocab)[:, :SEQ])

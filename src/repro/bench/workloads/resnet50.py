@@ -1,7 +1,13 @@
 """Paper Fig. 3 / Table III analog: ResNet50 training throughput + energy.
 
-images/s and images/Wh across a batch sweep (single device), using the
-data-parallel train step (the Horovod-analog path).
+images/s and images/Wh across a batch x placement sweep, using the
+data-parallel train step (the Horovod-analog path): a ``dp``-axis
+placement shards the image batch over the mesh's data axes while the
+parameters replicate — the gradient all-reduce GSPMD inserts is exactly
+Horovod's — and the AdamW state still ZeRO-1-shards over whatever axes
+divide it. The runner derives the scaling metrics (images-per-device
+throughput as ``tok_s_per_device``, ``scaling_efficiency``,
+``wh_per_token_scaling``) against the dp1 cell of the same sweep.
 """
 from __future__ import annotations
 
@@ -14,35 +20,59 @@ from repro.core.metrics import images_per_s
 from repro.core.params import Space
 from repro.data.synthetic import synthetic_images
 from repro.models import resnet
+from repro.parallel import sharding as shd
 from repro.train.optimizer import OptConfig, opt_init
 from repro.train.step import make_resnet_train_step
 
 
-def _setup():
-    c = CONFIG.reduced(img_size=64, width=16)
-    oc = OptConfig(warmup=2, total_steps=1000)
-    params = resnet.init(jax.random.key(0), c)
-    opt_state = opt_init(oc, params)
-    step = jax.jit(make_resnet_train_step(c, oc))
-    return c, params, opt_state, step
+def _base_state(ctx):
+    def make():
+        c = CONFIG.reduced(img_size=64, width=16)
+        oc = OptConfig(warmup=2, total_steps=1000)
+        params = resnet.init(jax.random.key(0), c)
+        opt_state = opt_init(oc, params)
+        return c, oc, params, opt_state
+
+    return ctx.memo("resnet50", make)
+
+
+def _placed(ctx):
+    """DP-plan-placed train state + jitted step for one placement."""
+    placement = ctx.placement
+
+    def make():
+        c, oc, params, opt_state = _base_state(ctx)
+        plan = shd.make_dp_plan(ctx.mesh())
+        params_s, opt_s, psh, _ = shd.shard_train_state(
+            plan, params, opt_state)
+        step = jax.jit(make_resnet_train_step(c, oc))
+        return c, plan, params_s, opt_s, step
+
+    return ctx.memo(("resnet50_placed", placement.label), make)
 
 
 @workload(
     "resnet50",
-    analog="Fig. 3 / Table III (ResNet50 images/s + energy)",
-    space=Space({"global_batch": [16, 32, 64]}),
-    smoke={"global_batch": [8]},
+    analog="Fig. 3 / Table III (ResNet50 images/s + energy, dp-scaled)",
+    space=Space({"global_batch": [16, 32, 64],
+                 "placement": ["dp1", "dp2", "dp4"]}),
+    smoke={"global_batch": [8], "placement": ["dp1", "dp2"]},
     tags=("vision", "train", "smoke", "full"),
-    result_columns=["global_batch", "images_per_s", "ms_per_step",
-                    "energy_wh_per_step", "images_per_wh", "power_source"],
+    result_columns=["global_batch", "placement", "images_per_s",
+                    "tok_s_per_device", "scaling_efficiency",
+                    "ms_per_step", "energy_wh_per_step", "images_per_wh",
+                    "wh_per_token_scaling", "power_source"],
     primary_metric="images_per_s",
 )
 def build(pt, ctx):
-    """ResNet50 train-step sweep over global batch size."""
-    c, params, opt_state, step = ctx.memo("resnet50", _setup)
+    """ResNet50 train-step sweep over global batch x device placement."""
+    c, plan, params, opt_state, step = _placed(ctx)
     gb = pt["global_batch"]
     imgs, labels = synthetic_images(gb, c.img_size, c.n_classes)
     batch = {"images": jnp.asarray(imgs), "labels": jnp.asarray(labels)}
+    batch = jax.device_put(
+        batch, {k: shd.batch_sharding(plan, v.shape)
+                for k, v in batch.items()})
 
     def train():
         p, o = params, opt_state

@@ -12,6 +12,7 @@ import json
 import os
 import pathlib
 
+from repro.bench.context import Measurement
 from repro.bench.spec import workload
 from repro.core.params import Space
 from repro.core.results import save_results, table
@@ -72,6 +73,14 @@ def build(pt, ctx):
             print(table(rows, floatfmt="{:.4f}"))
             save_results(rows, ctx.out_dir, f"roofline_{mesh}")
         by = [r.get("bottleneck") for r in rows]
+        # analysis-only: nothing here is timed, so the honest same-point
+        # noise figure is zero — without this stamp the runner falls back
+        # to the straggler watchdog's CROSS-POINT spread (two artifact
+        # sets of very different size), which saturated this workload's
+        # compare tolerances for no reason
+        ctx.last_measurement = Measurement(
+            seconds=0.0, energy_wh=0.0, power_source="none",
+            iters=1, warmup=0, rel_spread=0.0)
         return {"n_rows": len(rows),
                 "n_compute_bound": by.count("compute"),
                 "n_memory_bound": by.count("memory"),

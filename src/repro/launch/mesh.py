@@ -36,6 +36,13 @@ def make_mesh(shape, axes) -> jax.sharding.Mesh:
     return _mesh(shape, axes)
 
 
+def mesh_for(placement) -> jax.sharding.Mesh:
+    """Mesh for a ``repro.bench.spec.Placement`` (duck-typed: anything
+    with ``mesh_shape``/``mesh_axes``) — the bench runner's bridge from
+    a declarative placement to a live device mesh."""
+    return _mesh(placement.mesh_shape, placement.mesh_axes)
+
+
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh (everything except "model")."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -51,15 +51,51 @@ srun {container_prefix}python -m {module} {args}
 
 def render_job(*, job_name: str, module: str, args: str,
                system: SystemConfig, n_pods: int = 1,
+               n_hosts: int | None = None,
                time_limit: str = "02:00:00", log_dir: str = "logs") -> str:
+    """Render one sbatch script. ``n_hosts`` sizes the allocation
+    directly (a bench mesh that needs 4 hosts should not reserve a full
+    pod); default is whole pods (``hosts_per_pod * n_pods``)."""
     env_exports = "\n".join(f"export {k}={v}" for k, v in system.env.items())
     container_prefix = (f"apptainer exec {system.container} "
                         if system.container else "")
     return TEMPLATE.format(
         job_name=job_name, partition=system.partition, account=system.account,
-        n_hosts=system.hosts_per_pod * n_pods, cpus=112,
+        n_hosts=system.hosts_per_pod * n_pods if n_hosts is None else n_hosts,
+        cpus=112,
         time_limit=time_limit, log_dir=log_dir, env_exports=env_exports,
         container_prefix=container_prefix, module=module, args=args)
+
+
+def render_bench_job(*, workload: str, placement, point: dict,
+                     system: SystemConfig | None = None,
+                     out: str = "artifacts/bench",
+                     power: str = "auto",
+                     warmup: int | None = None,
+                     iters: int | None = None,
+                     job_suffix: str = "") -> str:
+    """The deferred-record script: re-run ONE bench point on a Slurm
+    allocation sized to its mesh (``placement`` is a
+    ``repro.bench.spec.Placement``). The bench runner renders this when
+    a point's mesh exceeds the local device count instead of erroring —
+    the sweep's local cells still measure, and the rendered script
+    carries the oversized cell to the cluster. ``out``/``power``/
+    ``warmup``/``iters`` forward the invoking run's settings so the
+    cluster record lands in the same results tree with a point key that
+    joins the local sweep (power_source is part of the key)."""
+    system = system or SystemConfig()
+    n_hosts = max(1, -(-placement.n_devices // system.chips_per_host))
+    points = ",".join(f"{k}={point[k]}" for k in sorted(point))
+    args = f"run --suite {workload} --out {out} --power {power}"
+    if warmup is not None:
+        args += f" --warmup {warmup}"
+    if iters is not None:
+        args += f" --iters {iters}"
+    if points:
+        args += f" --points {points}"
+    return render_job(
+        job_name=f"bench_{workload}_{placement.label}{job_suffix}",
+        module="repro.bench", args=args, system=system, n_hosts=n_hosts)
 
 
 def write_launch_scripts(out_dir, archs, system: SystemConfig | None = None):

@@ -29,11 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench.spec import Placement
 from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
 from repro.core.manifest import write_manifest
 from repro.data.loader import ShardedLoader, lm_sample_fn
 from repro.data.synthetic import synthetic_tokens
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import mesh_for
 from repro.models import lm
 from repro.parallel import sharding as shd
 from repro.train.loop import LoopConfig, train_loop
@@ -41,7 +43,10 @@ from repro.train.optimizer import OptConfig, opt_init
 from repro.train.step import StepConfig, make_train_step
 
 
-def make_data_iter(c, global_batch: int, seq_len: int, seed: int = 0):
+def make_data_iter(c, global_batch: int, seq_len: int, seed: int = 0,
+                   batch_put=None):
+    """``batch_put`` places each batch onto the active mesh (identity
+    when training single-device)."""
     toks = synthetic_tokens(4096, seq_len, c.vocab, seed=seed)
 
     def sample(idx: int):
@@ -60,7 +65,7 @@ def make_data_iter(c, global_batch: int, seq_len: int, seed: int = 0):
             if c.family == "encdec":
                 out["enc_frames"] = jnp.zeros(
                     (global_batch, c.enc_seq, c.d_model), jnp.bfloat16)
-            yield out
+            yield batch_put(out) if batch_put is not None else out
 
     return gen()
 
@@ -80,13 +85,25 @@ def main(argv=None):
     ap.add_argument("--fail-at-step", type=int, default=None,
                     help="inject a failure (fault-tolerance demo)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--placement", default="dp1",
+                    help="device mesh, e.g. dp4 or dp2tp2 — the same "
+                         "Placement spelling the bench sweeps use")
     args = ap.parse_args(argv)
 
     c = get_config(args.arch)
     if args.preset == "tiny":
         c = c.reduced()
+    placement = Placement.of(args.placement)
+    if placement.n_devices > jax.device_count():
+        raise SystemExit(
+            f"error: placement {placement.label} needs "
+            f"{placement.n_devices} devices, process has "
+            f"{jax.device_count()}; launch under the rendered Slurm "
+            f"scripts (repro.launch.slurm) or set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={placement.n_devices}")
     print(f"[train] arch={c.name} params={c.param_count()/1e6:.1f}M "
-          f"batch={args.global_batch} seq={args.seq_len}")
+          f"batch={args.global_batch} seq={args.seq_len} "
+          f"placement={placement.label}")
 
     oc = OptConfig(lr=args.lr, warmup=max(args.steps // 20, 5),
                    total_steps=args.steps)
@@ -94,9 +111,37 @@ def main(argv=None):
     key = jax.random.key(args.seed)
     params = lm.init(key, c)
     opt_state = opt_init(oc, params)
-    step = jax.jit(make_train_step(c, oc, sc), donate_argnums=(0, 1))
+    batch_put = None
+    if placement.n_devices > 1:
+        # same placement path as the bench workloads: Plan from the mesh,
+        # table-driven param/ZeRO-1 shardings, batch over the data axes —
+        # including per-microbatch constraints (the (gb,)->(k, mb)
+        # reshape loses the batch-axis sharding through GSPMD otherwise)
+        plan = shd.make_plan(c, mesh_for(placement), ShapeConfig(
+            "train_cli", args.seq_len, args.global_batch, "train"))
+        params, opt_state, psh, _ = shd.shard_train_state(
+            plan, params, opt_state, c)
+        mbs = args.global_batch // max(args.microbatches, 1)
+        bkeys = {"tokens": (mbs, args.seq_len),
+                 "labels": (mbs, args.seq_len)}
+        if c.family == "vlm":
+            bkeys["patch_embeds"] = (mbs, c.n_patches, c.d_model)
+        if c.family == "encdec":
+            bkeys["enc_frames"] = (mbs, c.enc_seq, c.d_model)
+        bsh = {k: shd.batch_sharding(plan, s) for k, s in bkeys.items()}
+        step = jax.jit(make_train_step(c, oc, sc, grad_shardings=psh,
+                                       batch_shardings=bsh),
+                       donate_argnums=(0, 1))
 
-    data = make_data_iter(c, args.global_batch, args.seq_len, args.seed)
+        def batch_put(batch):
+            return jax.device_put(
+                batch, {k: shd.batch_sharding(plan, v.shape)
+                        for k, v in batch.items()})
+    else:
+        step = jax.jit(make_train_step(c, oc, sc), donate_argnums=(0, 1))
+
+    data = make_data_iter(c, args.global_batch, args.seq_len, args.seed,
+                          batch_put=batch_put)
     cfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                      ckpt_dir=args.ckpt_dir, log_every=10,
                      seq_len=args.seq_len, global_batch=args.global_batch)

@@ -354,3 +354,55 @@ def logits_sharding(plan: Plan, shape: tuple[int, ...]) -> NamedSharding:
 
 def replicated(plan: Plan) -> NamedSharding:
     return NamedSharding(plan.mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Train-state placement (the bench layer / launch CLI entry point)
+# ---------------------------------------------------------------------------
+
+
+def make_dp_plan(mesh: Mesh) -> Plan:
+    """Pure data-parallel Plan for models the table-driven LM rules do
+    not describe (ResNet): params replicate, batch shards over every
+    non-"model" axis, optimizer state still ZeRO-1-shards over whatever
+    axes divide it."""
+    return Plan(mesh=mesh, dp=dp_axes(mesh), tp="model",
+                tp_size=axis_size(mesh, "model"), fsdp=False,
+                tp_heads=False, ep=False, seq_axis=None,
+                attn_impl="repeat", use_tp=False)
+
+
+def train_state_shardings(plan: Plan, params: Params, opt_state: Params,
+                          c: Optional[ModelConfig] = None):
+    """(param, optimizer-state) NamedSharding trees for one Plan.
+
+    With an LM ``ModelConfig`` the table-driven parameter rules apply
+    (TP/FSDP per plan); without one, parameters replicate (classic DP).
+    AdamW's ``m``/``v``/``master`` trees mirror the parameter tree and
+    get the ZeRO-1 extra-sharding; scalars and factored Adafactor
+    states replicate (their shapes do not mirror params).
+    """
+    if c is None:
+        psh = jax.tree.map(lambda _: replicated(plan), params)
+    else:
+        psh = param_shardings(c, plan, params)
+    mirrored = opt_state_shardings(plan, psh, params)
+    rep = replicated(plan)
+    osh = {k: (mirrored if k in ("m", "v", "master")
+               else jax.tree.map(lambda _: rep, v))
+           for k, v in opt_state.items()}
+    return psh, osh
+
+
+def shard_train_state(plan: Plan, params: Params, opt_state: Params,
+                      c: Optional[ModelConfig] = None):
+    """Place a concrete (params, opt_state) onto the plan's mesh.
+
+    Returns ``(params, opt_state, param_shardings, opt_shardings)`` —
+    the shardings double as ``make_train_step``'s ``grad_shardings``
+    and checkpoint-restore targets. This is the one device-placement
+    path shared by the bench workloads and ``repro.launch.train``.
+    """
+    psh, osh = train_state_shardings(plan, params, opt_state, c)
+    return (jax.device_put(params, psh), jax.device_put(opt_state, osh),
+            psh, osh)

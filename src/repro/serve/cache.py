@@ -237,11 +237,14 @@ class PagedKVCache:
     (``n_slots * ceil(max_len / block_size)`` + trash) so behaviour is
     drop-in for the slotted cache; pass ``n_blocks`` to oversubscribe —
     the real HBM lever: short requests only ever hold the blocks they
-    touched, so the freed reservation admits more slots per byte.
-    CAVEAT: the serve engine does not yet defer admission or preempt on
-    :class:`CacheOOM` — an oversubscribed pool whose concurrent load
-    outgrows it aborts the run (ROADMAP: paged serve follow-ups), so
-    oversubscribe only when the worst concurrent block demand is known.
+    touched, so the freed reservation admits more slots per byte. The
+    serve engine admission-controls an oversubscribed pool: a request
+    whose worst-case block demand exceeds the unreserved headroom is
+    deferred back to the queue (``ServeEngine._admit_paged``) until
+    finishing slots free blocks, so concurrent load that outgrows the
+    pool queues instead of raising :class:`CacheOOM`. The exception
+    remains the contract for direct allocator misuse (``ensure`` past
+    an exhausted pool without going through admission).
     """
 
     def __init__(self, c: ModelConfig, n_slots: int, max_len: int,

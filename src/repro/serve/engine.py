@@ -199,6 +199,11 @@ class ServeEngine:
                 serve_step, donate_argnums=(2,) if donate else ())
             self._paged_steps: dict = {}
             self._paged: Optional[PagedKVCache] = None
+            #: admission-control ledger: slot -> worst-case block demand
+            #: (prompt + full token budget). Admission only proceeds when
+            #: the pool can cover every active slot's remaining demand,
+            #: so decode-time ``ensure`` growth can never hit CacheOOM.
+            self._slot_cap: dict[int, int] = {}
             self.caches: Params = None   # allocated on first serve()
 
     # ------------------------------------------------------------------
@@ -277,6 +282,46 @@ class ServeEngine:
         return min(max(b, self.block_size), self.max_len)
 
     # ------------------------------------------------------------------
+    # Paged admission control (CacheOOM -> deferral, not a crash)
+    # ------------------------------------------------------------------
+
+    def _free_paged_slot(self, slot_index: int) -> None:
+        self._paged.free(slot_index)
+        self._slot_cap.pop(slot_index, None)
+
+    def _paged_headroom(self) -> int:
+        """Free blocks not yet spoken for by active slots' worst-case
+        growth (their cap minus what they already own)."""
+        reserved = sum(max(0, cap - self._paged.owned(s))
+                       for s, cap in self._slot_cap.items())
+        return self._paged.free_blocks - reserved
+
+    def _admit_paged(self, sched: Scheduler, admitted: list) -> list:
+        """Defer admissions an oversubscribed pool cannot reserve.
+
+        Each admitted request reserves its worst-case block demand
+        (prompt + full ``max_new_tokens`` budget); when the pool's
+        unreserved headroom cannot cover the next request, that request
+        — and everything behind it, preserving FIFO — goes back to the
+        queue front and waits for active slots to finish and free
+        blocks. Because an empty pool always covers one full slot
+        (PagedKVCache asserts so), the head request always admits
+        eventually: deferral, never deadlock, never ``CacheOOM``.
+        """
+        ok = []
+        for i, slot in enumerate(admitted):
+            req = slot.request
+            cap = -(-(req.prompt_len + req.max_new_tokens)
+                    // self.block_size)
+            if cap > self._paged_headroom():
+                for later in reversed(admitted[i:]):
+                    sched.unadmit(later)
+                break
+            self._slot_cap[slot.index] = cap
+            ok.append(slot)
+        return ok
+
+    # ------------------------------------------------------------------
     # Model-backed serve phases
     # ------------------------------------------------------------------
 
@@ -333,7 +378,7 @@ class ServeEngine:
                 if reason is not None:
                     res.finish_s, res.finish_reason = t1, reason
                     if self._paged is not None:
-                        self._paged.free(slot_index)
+                        self._free_paged_slot(slot_index)
 
     def _decode_plan(self, sched: Scheduler, active) -> int:
         """How many decode steps can run before the host must look.
@@ -413,7 +458,7 @@ class ServeEngine:
                 if reason is not None:
                     res.finish_s, res.finish_reason = t1, reason
                     if self._paged is not None:
-                        self._paged.free(slot_index)
+                        self._free_paged_slot(slot_index)
 
     # ------------------------------------------------------------------
     # Warmup (compile outside any measured window)
@@ -485,6 +530,9 @@ class ServeEngine:
             now_rel = self.clock() - t_start
             # -- admission: prefill newly admitted requests ---------------
             admitted = sched.refill(now_rel)
+            if admitted and not self._scripted \
+                    and self.cache_kind == "paged":
+                admitted = self._admit_paged(sched, admitted)
             if admitted and not self._scripted:
                 self._model_prefill_admitted(sched, admitted, results,
                                              steps, ts, ws)

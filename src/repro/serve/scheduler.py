@@ -174,6 +174,19 @@ class Scheduler:
         slot.request = None
         slot.generated = 0
 
+    def unadmit(self, slot: Slot) -> Request:
+        """Return a just-admitted (not yet prefilled) request to the
+        FRONT of the queue and free its slot — the engine's admission-
+        control hook for a cache pool that cannot reserve the request's
+        worst-case footprint yet. Unadmit in reverse admission order to
+        preserve FIFO."""
+        req = slot.request
+        assert req is not None and slot.generated == 0, (
+            "unadmit is only valid before the first token")
+        self._free(slot)
+        self.queue.appendleft(req)
+        return req
+
     # -- batched views for the decode step -------------------------------
     def input_tokens(self) -> np.ndarray:
         """(n_slots,) int32 — each slot's next input token (0 if idle)."""

@@ -71,8 +71,15 @@ def test_smoke_space_is_narrower_and_points_override():
 
 
 def test_multi_device_workloads_declare_their_floor():
-    assert get_workload("pipeline_gpt").n_devices == 4
-    assert get_workload("heatmap").n_devices == 8
+    # pipeline_gpt's spec-level placement maps its stages onto "pp"
+    pg = get_workload("pipeline_gpt")
+    assert pg.placement.dict() == {"pp": 4} and pg.n_devices == 4
+    # heatmap sweeps a placement AXIS up to dp8; the CLI sizes the host
+    # platform from the sweep, not a scalar floor
+    hm = get_workload("heatmap")
+    assert hm.n_devices == 1 and hm.max_devices() == 8
+    assert hm.max_devices(smoke=True) == 2
+    assert get_workload("llm_train").max_devices() == 4
 
 
 # ---------------------------------------------------------------------------

@@ -37,8 +37,8 @@ def rec(workload="w", point=None, metrics=None, power="synthetic",
 def test_point_key_components():
     r = rec(point={"seq": 64, "global_batch": 8}, n_devices=4)
     key = point_key(r)
-    assert key == "w|global_batch=8,seq=64|ndev=4|power=synthetic"
-    assert point_key(r, with_power=False) == "w|global_batch=8,seq=64|ndev=4"
+    assert key == "w|global_batch=8,seq=64|plc=dp4|power=synthetic"
+    assert point_key(r, with_power=False) == "w|global_batch=8,seq=64|plc=dp4"
 
 
 def test_point_key_distinguishes_power_and_devices():
@@ -46,6 +46,9 @@ def test_point_key_distinguishes_power_and_devices():
     assert point_key(base) != point_key(rec(power="rapl"))
     assert point_key(base) != point_key(rec(n_devices=2))
     assert point_key(base) != point_key(rec(point={"bs": 16}))
+    # same device count, different mesh shape -> different measurement
+    assert point_key(rec(placement={"dp": 4})) != \
+        point_key(rec(placement={"dp": 2, "tp": 2}))
 
 
 @settings(max_examples=25)

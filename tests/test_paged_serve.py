@@ -253,6 +253,28 @@ def test_ssm_family_batched_prefill_keeps_exact_state():
     assert out.by_rid()[0].tokens == want
 
 
+def test_paged_matches_slotted_for_ssm_hybrid_stack():
+    """The trickiest layout interaction: ssm/hybrid stacks prefill at
+    EXACT prompt length while attention KV pages into the shared pool —
+    per-slot SSM/conv state rides beside (L, n_blocks, bs, ...) leaves.
+    Token streams must be identical to the slotted reference."""
+    c = get_config("mamba2-1.3b").reduced(dtype="float32",
+                                          param_dtype="float32")
+    params = lm.init(jax.random.key(1), c)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, c.vocab, PROMPT).astype(np.int32),
+                    max_new_tokens=6, arrival_s=0.0) for i in range(3)]
+
+    def run(cache):
+        eng = ServeEngine(c, params, n_slots=2, max_len=32, cache=cache,
+                          block_size=16, decode_window=4)
+        out = eng.serve(list(reqs), policy="continuous")
+        return {r.rid: r.tokens for r in out.results}
+
+    assert run("paged") == run("slotted")
+
+
 def test_oversubscribed_pool_serves_when_load_fits(setup):
     """The HBM lever: a pool with fewer blocks than n_slots*max_blocks
     still serves short requests (they only touch what they own)."""
@@ -265,3 +287,54 @@ def test_oversubscribed_pool_serves_when_load_fits(setup):
     out = eng.serve(reqs, policy="continuous")
     assert all(r.finish_reason == "length" for r in out.results)
     assert eng._paged.free_blocks == n_blocks - 1
+
+
+def test_oversubscribed_pool_defers_admission_instead_of_oom(setup):
+    """Admission control: concurrent worst-case demand that OUTGROWS the
+    pool must defer admissions (requests wait in the queue for finishing
+    slots to free blocks) and serve everyone — the pre-admission-control
+    engine died on CacheOOM here."""
+    c, params = setup
+    # pool holds exactly one full slot + trash; three slots' worth of
+    # near-max-budget requests is 3x the pool
+    n_blocks = 1 + MAX_LEN // BS
+    eng = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                      cache="paged", block_size=BS, n_blocks=n_blocks,
+                      decode_window=4)
+    budget = MAX_LEN - PROMPT
+    reqs = [Request(rid=i, prompt=np.zeros(PROMPT, np.int32),
+                    max_new_tokens=budget, arrival_s=0.0)
+            for i in range(3)]
+    out = eng.serve(reqs, policy="continuous")
+    assert sorted(r.rid for r in out.results) == [0, 1, 2]
+    assert all(r.finish_reason == "length" for r in out.results)
+    assert all(len(r.tokens) == budget for r in out.results)
+    # FIFO preserved under deferral: rid 0 finishes no later than rid 2
+    by = out.by_rid()
+    assert by[0].finish_s <= by[2].finish_s
+    # every block returned; reservation ledger empty
+    assert eng._paged.free_blocks == n_blocks - 1
+    assert eng._slot_cap == {}
+
+
+def test_deferred_admission_token_streams_match_roomy_pool(setup):
+    """Deferral is scheduling only: the tokens a request generates are
+    identical to a run where the pool never had to defer."""
+    c, params = setup
+    rng = np.random.default_rng(9)
+    budget = MAX_LEN - PROMPT
+    prompts = [rng.integers(0, c.vocab, PROMPT).astype(np.int32)
+               for _ in range(3)]
+
+    def run(n_blocks):
+        eng = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                          cache="paged", block_size=BS, n_blocks=n_blocks,
+                          decode_window=4)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=budget,
+                        arrival_s=0.0) for i in range(3)]
+        return {r.rid: r.tokens for r in
+                eng.serve(reqs, policy="continuous").results}
+
+    tight = run(1 + MAX_LEN // BS)          # one slot at a time
+    roomy = run(None)                       # full worst-case reservation
+    assert tight == roomy
