@@ -39,22 +39,29 @@ bench-compare:   ## fresh smoke run gated against the committed baselines
 	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench \
 	    --fail-on-regression --fail-on-missing
 
+WORKLOADS ?= serve llm_train
+LABEL ?= local run
+
+# promotion REPLACES the baseline store, so the old->new compare is
+# appended to the BENCH_<workload>.json trajectories first (the perf
+# history the store loses); commit both
 bench-promote:   ## refresh the committed baselines from a fresh smoke run
 	rm -rf artifacts/ci-bench
 	$(PY) -m repro.bench run --tags smoke --power synthetic \
 	    --out artifacts/ci-bench
+	$(PY) scripts/bench_trajectory.py \
+	    $(foreach w,$(WORKLOADS),--workload $(w)) \
+	    --baseline $(BASELINES) --current artifacts/ci-bench \
+	    --label "$(LABEL)"
 	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench --promote
 
-WORKLOAD ?= serve
-LABEL ?= local run
-
-# append-only perf history (BENCH_<workload>.json at the repo root):
-# promotion REPLACES the baseline store, so record the old->new compare
-# BEFORE `make bench-promote` and commit both
+# append-only perf history (BENCH_<workload>.json at the repo root)
+# without promoting
 bench-trajectory:  ## fresh smoke run diffed against baselines -> BENCH_*.json
 	rm -rf artifacts/ci-bench
-	$(PY) -m repro.bench run --suite $(WORKLOAD) --tags smoke \
-	    --power synthetic --out artifacts/ci-bench
-	$(PY) scripts/bench_trajectory.py --workload $(WORKLOAD) \
+	$(PY) -m repro.bench run --tags smoke --power synthetic \
+	    --out artifacts/ci-bench
+	$(PY) scripts/bench_trajectory.py \
+	    $(foreach w,$(WORKLOADS),--workload $(w)) \
 	    --baseline $(BASELINES) --current artifacts/ci-bench \
 	    --label "$(LABEL)"

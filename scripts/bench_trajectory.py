@@ -12,6 +12,9 @@ of a workload survives across promotions and PRs.
         --baseline artifacts/bench/baselines --current artifacts/ci-bench \
         --label "PR 4: paged KV + fused decode"
 
+``--workload`` is repeatable: each named workload appends one entry to
+its own ``BENCH_<workload>.json`` from the same baseline/current pair.
+
 ``--backfill-axis key=value`` (repeatable) handles Space schema growth:
 when a workload gains a new axis, the old baseline's points predate it
 and would no longer join by point key. Backfilling stamps the given
@@ -62,7 +65,10 @@ def parse_axis(kv: str) -> tuple[str, str]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="append a compare entry to BENCH_<workload>.json")
-    ap.add_argument("--workload", required=True)
+    ap.add_argument("--workload", required=True, action="append",
+                    dest="workloads", metavar="WORKLOAD",
+                    help="repeatable: each workload appends to its own "
+                         "BENCH_<workload>.json")
     ap.add_argument("--baseline", default="artifacts/bench/baselines")
     ap.add_argument("--current", default="artifacts/ci-bench")
     ap.add_argument("--out", default=None,
@@ -79,13 +85,23 @@ def main(argv=None) -> int:
                          "trajectories against old records whose stamped "
                          "watchdog noise is a cross-point artifact)")
     args = ap.parse_args(argv)
+    if args.out and len(args.workloads) > 1:
+        print("[trajectory] --out only applies to a single --workload",
+              file=sys.stderr)
+        return 2
+    all_base = load_result_set(args.baseline)
+    all_cur = load_result_set(args.current)
+    rc = 0
+    for workload in args.workloads:
+        rc = max(rc, _append_one(workload, all_base, all_cur, args))
+    return rc
 
-    base = [r for r in load_result_set(args.baseline)
-            if r.workload == args.workload]
-    cur = [r for r in load_result_set(args.current)
-           if r.workload == args.workload]
+
+def _append_one(workload: str, all_base, all_cur, args) -> int:
+    base = [r for r in all_base if r.workload == workload]
+    cur = [r for r in all_cur if r.workload == workload]
     if not cur:
-        print(f"[trajectory] no {args.workload!r} records in "
+        print(f"[trajectory] no {workload!r} records in "
               f"{args.current}", file=sys.stderr)
         return 2
     for key, value in args.backfill_axis:
@@ -120,7 +136,7 @@ def main(argv=None) -> int:
         points.append(row)
 
     entry = {
-        "workload": args.workload,
+        "workload": workload,
         "git_sha": git_sha(),
         "label": args.label,
         "baseline": str(args.baseline),
@@ -130,7 +146,7 @@ def main(argv=None) -> int:
         "summary": cmp.counts(),
         "points": points,
     }
-    out = pathlib.Path(args.out or f"BENCH_{args.workload}.json")
+    out = pathlib.Path(args.out or f"BENCH_{workload}.json")
     history = json.loads(out.read_text()) if out.exists() else []
     if not isinstance(history, list):
         print(f"[trajectory] {out} is not a JSON list; refusing to clobber",

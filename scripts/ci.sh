@@ -33,9 +33,16 @@ python -m repro.bench run --tags smoke --power synthetic \
 
 # 3a. The dp-scaling smoke cells must actually have recorded scaling
 #     metrics — a silent stamping regression would otherwise disarm the
-#     scaling gate while every raw-throughput cell stayed green.
+#     scaling gate while every raw-throughput cell stayed green — AND
+#     multi-device llm_train cells must clear the scaling_efficiency
+#     floor (ISSUE 6: dp2 collapsed to 0.10 via jit recompile churn;
+#     the floor keeps scaling from silently inverting again). The
+#     efficiency is emulation-aware (normalized by min(n_devices, host
+#     cores) — runner._emulation_device_cap), so the floor is
+#     meaningful even on a 1-core CI host faking N devices.
 python - <<'EOF'
 import json, sys
+FLOOR = 0.6
 recs = json.load(open("artifacts/ci-bench/llm_train/results.json"))["records"]
 dp2 = [r for r in recs if r["point"].get("placement") == "dp2"
        and r["status"] == "ok"]
@@ -45,7 +52,15 @@ missing = [r["point"] for r in dp2
 if not dp2 or missing:
     sys.exit(f"dp-scaling smoke cell broken: dp2 cells={len(dp2)} "
              f"missing scaling metrics={missing}")
-print(f"dp-scaling smoke: {len(dp2)} dp2 cell(s) with scaling metrics")
+low = [(r["point"], r["metrics"]["scaling_efficiency"])
+       for r in recs
+       if r["status"] == "ok" and r.get("n_devices", 1) > 1
+       and r["metrics"].get("scaling_efficiency", 1.0) < FLOOR]
+if low:
+    sys.exit(f"scaling_efficiency floor {FLOOR} violated: {low}")
+effs = [round(r["metrics"]["scaling_efficiency"], 3) for r in dp2]
+print(f"dp-scaling smoke: {len(dp2)} dp2 cell(s), "
+      f"scaling_efficiency={effs} (floor {FLOOR})")
 EOF
 
 # 3b. Paged decode-attention kernel drill: one serve cell with every
@@ -60,15 +75,14 @@ REPRO_PAGED_IMPL=pallas-interpret python -m repro.bench run --suite serve \
 
 # 4. Regression gate: the smoke run just produced must not be slower or
 #    hungrier than the committed baselines beyond tolerance. The base
-#    tolerance is widened here (default=0.45) because shared CI hosts
-#    are noisy — but every workload now stamps same-point measure_split
-#    noise (the serve cells run twice; ctx.measure times two
-#    half-windows; the untimed roofline stamps zero), so the old 0.6
-#    blanket is tighter-able: measured rel_std sits at 0.03-0.15 and the
-#    noise-k widening absorbs per-point wobble. `make bench-compare`
-#    runs the tight default gate locally. Refresh the store after an
-#    intentional perf change with `make bench-promote` and commit
-#    artifacts/bench/baselines/.
+#    tolerance is 0.3 (was 0.45, was 0.6): every workload stamps
+#    same-point measure_split noise (rel_std 0.03-0.15) and the compare
+#    engine widens per point by noise_k * rel_std, so the blanket only
+#    needs to cover systematic host drift, not per-point wobble;
+#    workloads that genuinely can't hold 0.3 carry their own
+#    compare_tols. `make bench-compare` runs the tight default gate
+#    locally. Refresh the store after an intentional perf change with
+#    `make bench-promote` and commit artifacts/bench/baselines/.
 python -m repro.bench compare artifacts/bench/baselines artifacts/ci-bench \
-    --fail-on-regression --fail-on-missing --rel-tol default=0.45 \
+    --fail-on-regression --fail-on-missing --rel-tol default=0.3 \
     --report-out artifacts/ci-bench/compare-report.md

@@ -21,7 +21,7 @@ from repro.bench.context import Measurement, RunContext
 from repro.bench.records import (
     COMPARED_METRICS, SCHEMA_VERSION, ResultRecord, compare_metrics,
     load_records, placement_label, point_key, save_records,
-    stamp_scaling_metrics,
+    scaling_floor_violations, stamp_scaling_metrics,
 )
 from repro.bench.runner import WorkloadRunner
 from repro.bench.spec import (
@@ -34,7 +34,8 @@ __all__ = [
     "load_result_set", "promote",
     "Measurement", "RunContext", "COMPARED_METRICS", "SCHEMA_VERSION",
     "ResultRecord", "compare_metrics", "load_records", "placement_label",
-    "point_key", "save_records", "stamp_scaling_metrics", "WorkloadRunner",
+    "point_key", "save_records", "scaling_floor_violations",
+    "stamp_scaling_metrics", "WorkloadRunner",
     "Placement", "UnknownWorkloadError", "WorkloadSpec", "get_workload",
     "iter_workloads", "register", "unregister", "workload",
     "workload_names",

@@ -239,7 +239,8 @@ def scaling_base_key(rec: ResultRecord) -> tuple:
     return (rec.workload, params, rec.power_source)
 
 
-def stamp_scaling_metrics(records: list) -> None:
+def stamp_scaling_metrics(records: list,
+                          device_cap: Optional[int] = None) -> None:
     """Derive the cross-placement scaling metrics for one result set.
 
     Every ok record with a throughput metric gains ``tok_s_per_device``
@@ -251,6 +252,17 @@ def stamp_scaling_metrics(records: list) -> None:
     1.0 = energy parity, above = each token costs more at scale). All
     three are in ``COMPARED_METRICS``, so a scaling collapse gates the
     compare engine even when the raw throughput cell stays green.
+
+    ``device_cap`` makes the derivation emulation-aware: when the mesh
+    is forced host-platform fake devices (``device_count > cpu cores``),
+    an N-"device" cell has at most ``cap`` cores of real compute, so
+    dividing by N would bill the cell for parallelism the host cannot
+    physically deliver. The per-device figures then normalize by
+    ``n_eff = min(n, cap)`` (recorded as the ``effective_devices``
+    metric), and ``wh_per_token_scaling`` is rescaled by ``n_eff / n``
+    to cancel the synthetic-power model billing each fake device as a
+    full chip. On real hardware ``device_cap=None`` leaves the classic
+    semantics untouched.
     """
     ones = {}
     for r in records:
@@ -270,7 +282,10 @@ def stamp_scaling_metrics(records: list) -> None:
         if not math.isfinite(tp):
             continue
         n = max(r.n_devices, 1)
-        r.metrics.setdefault("tok_s_per_device", tp / n)
+        n_eff = n if device_cap is None else max(min(n, int(device_cap)), 1)
+        if n_eff != n:
+            r.metrics.setdefault("effective_devices", n_eff)
+        r.metrics.setdefault("tok_s_per_device", tp / n_eff)
         if n == 1:
             continue
         base = ones.get(scaling_base_key(r))
@@ -281,7 +296,7 @@ def stamp_scaling_metrics(records: list) -> None:
         except (TypeError, ValueError):
             continue
         if math.isfinite(base_tp) and base_tp > 0.0:
-            r.metrics["scaling_efficiency"] = (tp / n) / base_tp
+            r.metrics["scaling_efficiency"] = (tp / n_eff) / base_tp
         eff_name = next((m for m in EFFICIENCY_METRICS
                          if m in r.metrics and m in base.metrics), None)
         if eff_name is None:
@@ -292,8 +307,29 @@ def stamp_scaling_metrics(records: list) -> None:
         except (TypeError, ValueError):
             continue
         if all(math.isfinite(v) and v > 0.0 for v in (cur_eff, base_eff)):
-            # (Wh/token at n devices) / (Wh/token at 1) == eff_1 / eff_n
-            r.metrics["wh_per_token_scaling"] = base_eff / cur_eff
+            # (Wh/token at n devices) / (Wh/token at 1) == eff_1 / eff_n;
+            # under emulation, n_eff/n cancels the synthetic power model
+            # billing each fake device as a full physical chip
+            r.metrics["wh_per_token_scaling"] = (
+                (base_eff / cur_eff) * (n_eff / n))
+
+
+def scaling_floor_violations(records: list, floor: float) -> list:
+    """Multi-device ok records whose ``scaling_efficiency`` fell below
+    ``floor`` — the CI gate that keeps dp scaling from silently
+    inverting again. Returns ``(record, efficiency)`` pairs."""
+    out = []
+    for r in records:
+        if not r.ok or r.n_devices <= 1:
+            continue
+        eff = r.metrics.get("scaling_efficiency")
+        try:
+            eff = float(eff)
+        except (TypeError, ValueError):
+            continue
+        if math.isfinite(eff) and eff < floor:
+            out.append((r, eff))
+    return out
 
 
 def metric_direction(name: str) -> bool:

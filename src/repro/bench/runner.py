@@ -22,6 +22,7 @@ measure, and the script carries the oversized cell to the cluster.
 from __future__ import annotations
 
 import math
+import os
 import pathlib
 import re
 import time
@@ -37,6 +38,24 @@ from repro.core.results import table
 from repro.core.runner import StragglerWatchdog, run_attempts
 from repro.launch.slurm import render_bench_job
 from repro.power.methods import PowerMethod, select_power_methods
+
+
+def _emulation_device_cap() -> Optional[int]:
+    """Physical-core cap for scaling metrics when the "devices" are
+    forced host-platform fakes (``--xla_force_host_platform_device_count``
+    on a CPU backend): N fake devices share ``cores`` real cores, so
+    per-device figures normalize by ``min(n, cores)``. Returns None on
+    real accelerators (or single-device CPU) — classic semantics."""
+    try:
+        import jax
+        if jax.default_backend() != "cpu" or jax.device_count() <= 1:
+            return None
+    except Exception:
+        return None
+    try:
+        return len(os.sched_getaffinity(0)) or None
+    except (AttributeError, OSError):
+        return os.cpu_count()
 
 
 class WorkloadRunner:
@@ -111,7 +130,8 @@ class WorkloadRunner:
             # scaling metrics join cells ACROSS the sweep (each scaled
             # cell against its 1-device twin), so re-derive over the
             # whole record list before each incremental save
-            stamp_scaling_metrics(self.records)
+            stamp_scaling_metrics(self.records,
+                                  device_cap=_emulation_device_cap())
             save_records(self.records, self.out)
         return self.records
 

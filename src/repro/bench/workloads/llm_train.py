@@ -8,10 +8,16 @@ the runner derives (tok_s_per_device, scaling_efficiency,
 wh_per_token_scaling against the dp1 cell of the same sweep).
 
 The ``placement`` axis is real sharded execution, not bookkeeping: each
-cell builds a ``parallel.sharding.Plan`` from its mesh, places
-params/optimizer-state with the table-driven TP/FSDP/ZeRO-1 rules,
-shards the batch over the data axes, and constrains the micro-batch
-gradient accumulator so GSPMD reduce-scatters instead of all-reducing.
+cell builds a ``parallel.sharding.Plan`` from its mesh and places
+params/optimizer-state with the table-driven TP/FSDP/ZeRO-1 rules. Pure
+data-parallel cells run the explicit bucketed gradient sync
+(``parallel.grad_sync``) with the ``grad_sync`` axis selecting fp32 or
+int8-compressed all-reduce; mixed placements keep the GSPMD path with
+ZeRO-2 dp-sharded grad accumulators. Both paths pin the jitted step's
+output shardings to the input placement and donate params/opt-state —
+without the pin the returned params' layout drifts and every call after
+the first recompiles (the dp-scaling collapse PR 5 measured as
+scaling_efficiency 0.10).
 """
 from __future__ import annotations
 
@@ -25,11 +31,22 @@ from repro.core.metrics import tokens_per_s
 from repro.core.params import Space
 from repro.data.synthetic import synthetic_tokens
 from repro.models import lm
+from repro.parallel import grad_sync as gs
 from repro.parallel import sharding as shd
 from repro.train.optimizer import OptConfig, opt_init
 from repro.train.step import StepConfig, make_train_step
 
 MICROBATCHES = 4
+
+
+def _microbatches(gb: int, ndev: int) -> int:
+    """Largest microbatch count <= MICROBATCHES that divides the
+    per-device batch (halving clamp — keeps small smoke batches legal
+    on larger dp meshes)."""
+    k = MICROBATCHES
+    while k > 1 and (gb // max(ndev, 1)) % k:
+        k //= 2
+    return k
 
 
 def _base_state(ctx, arch: str):
@@ -57,41 +74,64 @@ def _placed_state(ctx, arch: str):
         c, oc, params, opt_state = _base_state(ctx, arch)
         plan = shd.make_plan(c, ctx.mesh(),
                              ShapeConfig("bench", 0, 0, "train"))
-        params_s, opt_s, psh, _ = shd.shard_train_state(
+        params_s, opt_s, psh, osh, gsh = shd.shard_train_state(
             plan, params, opt_state, c)
-        return c, oc, plan, params_s, opt_s, psh
+        return c, oc, plan, params_s, opt_s, psh, osh, gsh
 
     return ctx.memo(("llm_train_placed", arch, placement.label), make)
 
 
 def _placed(ctx, pt):
     """Placed state + the cell's jitted step (only the step — via its
-    batch shardings — depends on the cell's shapes)."""
+    batch shardings and grad_sync mode — depends on the cell's shapes)."""
     arch, gb, seq = pt["arch"], pt["global_batch"], pt["seq"]
-    c, oc, plan, params_s, opt_s, psh = _placed_state(ctx, arch)
+    mode = pt.get("grad_sync", "fp32")
+    c, oc, plan, params_s, opt_s, psh, osh, gsh = _placed_state(ctx, arch)
+    ndev = shd.dp_size(plan)
+    k = _microbatches(gb, ndev)
+    pure_dp = plan.tp_size == 1
 
     def make_step():
-        mb = gb // MICROBATCHES
-        bsh = {"tokens": shd.batch_sharding(plan, (mb, seq)),
-               "labels": shd.batch_sharding(plan, (mb, seq))}
-        return jax.jit(make_train_step(
-            c, oc, StepConfig(microbatches=MICROBATCHES),
-            grad_shardings=psh, batch_shardings=bsh))
+        sc = StepConfig(microbatches=k)
+        if pure_dp:
+            # explicit bucketed (optionally compressed) gradient sync;
+            # backward-overlap on async-collective backends only
+            sync = gs.default_sync(mode)
+            step = jax.jit(
+                gs.make_dp_train_step(c, oc, sc, plan=plan, sync=sync),
+                out_shardings=(psh, osh, gs.sync_state_sharding(plan),
+                               None),
+                donate_argnums=(0, 1, 2))
+            return step, sync
+        # mixed dp x tp placements: GSPMD step with ZeRO-2 dp-sharded
+        # grad accumulators, per-microbatch batch constraints
+        mb = gb // k
+        mbsh = {"tokens": shd.batch_sharding(plan, (mb, seq)),
+                "labels": shd.batch_sharding(plan, (mb, seq))}
+        step = jax.jit(
+            make_train_step(c, oc, sc, grad_shardings=gsh,
+                            batch_shardings=mbsh),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1))
+        return step, None
 
-    step = ctx.memo(("llm_train_step", arch, ctx.placement.label, gb, seq),
-                    make_step)
-    return c, plan, params_s, opt_s, step
+    step, sync = ctx.memo(
+        ("llm_train_step", arch, ctx.placement.label, gb, seq, mode),
+        make_step)
+    return c, plan, params_s, opt_s, psh, osh, step, sync
 
 
 @workload(
     "llm_train",
     analog="Fig. 2 (LLM tokens/s + energy vs global batch, dp-scaled)",
     space=Space({"arch": ["gpt-800m"], "global_batch": [16, 32, 64],
-                 "seq": [128], "placement": ["dp1", "dp2", "dp4"]}),
-    smoke={"global_batch": [8], "seq": [64], "placement": ["dp1", "dp2"]},
+                 "seq": [128], "placement": ["dp1", "dp2", "dp4"],
+                 "grad_sync": ["fp32", "int8"]}),
+    smoke={"global_batch": [8], "seq": [64], "placement": ["dp1", "dp2"],
+           "grad_sync": ["fp32"]},
     tags=("train", "smoke", "full"),
     result_columns=["arch", "global_batch", "seq", "placement",
-                    "tokens_per_s", "tok_s_per_device",
+                    "grad_sync", "tokens_per_s", "tok_s_per_device",
                     "scaling_efficiency", "ms_per_step",
                     "energy_wh_per_step", "tokens_per_wh",
                     "wh_per_token_scaling", "power_source"],
@@ -99,7 +139,7 @@ def _placed(ctx, pt):
 )
 def build(pt, ctx):
     """LLM train-step sweep over global batch x device placement."""
-    c, plan, params, opt_state, step = _placed(ctx, pt)
+    c, plan, params, opt_state, psh, osh, step, sync = _placed(ctx, pt)
     gb, seq = pt["global_batch"], pt["seq"]
     toks = jnp.asarray(synthetic_tokens(gb, seq, c.vocab)[:, :seq])
     batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
@@ -108,11 +148,18 @@ def build(pt, ctx):
                 for k, v in batch.items()})
 
     def train():
-        p, o = params, opt_state
+        # the step donates its state buffers, and the placed state is
+        # memoized across cells/retries — each thunk works on copies
+        p = jax.device_put(jax.tree.map(jnp.copy, params), psh)
+        o = jax.device_put(jax.tree.map(jnp.copy, opt_state), osh)
+        s = gs.init_sync_state(plan, params, sync) if sync else None
 
         def one():
-            nonlocal p, o
-            p, o, m = step(p, o, batch)
+            nonlocal p, o, s
+            if sync is not None:
+                p, o, s, m = step(p, o, s, batch)
+            else:
+                p, o, m = step(p, o, batch)
             return m["loss"]
 
         m = ctx.measure(one)

@@ -43,10 +43,15 @@ def _placed(ctx):
     def make():
         c, oc, params, opt_state = _base_state(ctx)
         plan = shd.make_dp_plan(ctx.mesh())
-        params_s, opt_s, psh, _ = shd.shard_train_state(
+        params_s, opt_s, psh, osh, _ = shd.shard_train_state(
             plan, params, opt_state)
-        step = jax.jit(make_resnet_train_step(c, oc))
-        return c, plan, params_s, opt_s, step
+        # pin output shardings + donate: without the pin the returned
+        # params' layout drifts from the placed inputs and every call
+        # after the first recompiles (the dp-scaling collapse)
+        step = jax.jit(make_resnet_train_step(c, oc),
+                       out_shardings=(psh, osh, None),
+                       donate_argnums=(0, 1))
+        return c, plan, params_s, opt_s, psh, osh, step
 
     return ctx.memo(("resnet50_placed", placement.label), make)
 
@@ -66,7 +71,7 @@ def _placed(ctx):
 )
 def build(pt, ctx):
     """ResNet50 train-step sweep over global batch x device placement."""
-    c, plan, params, opt_state, step = _placed(ctx)
+    c, plan, params, opt_state, psh, osh, step = _placed(ctx)
     gb = pt["global_batch"]
     imgs, labels = synthetic_images(gb, c.img_size, c.n_classes)
     batch = {"images": jnp.asarray(imgs), "labels": jnp.asarray(labels)}
@@ -75,7 +80,10 @@ def build(pt, ctx):
                 for k, v in batch.items()})
 
     def train():
-        p, o = params, opt_state
+        # donated buffers: give each thunk its own copies so the
+        # memoized state survives retries and later points
+        p = jax.device_put(jax.tree.map(jnp.copy, params), psh)
+        o = jax.device_put(jax.tree.map(jnp.copy, opt_state), osh)
 
         def one():
             nonlocal p, o

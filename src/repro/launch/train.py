@@ -119,7 +119,7 @@ def main(argv=None):
         # reshape loses the batch-axis sharding through GSPMD otherwise)
         plan = shd.make_plan(c, mesh_for(placement), ShapeConfig(
             "train_cli", args.seq_len, args.global_batch, "train"))
-        params, opt_state, psh, _ = shd.shard_train_state(
+        params, opt_state, psh, osh, gsh = shd.shard_train_state(
             plan, params, opt_state, c)
         mbs = args.global_batch // max(args.microbatches, 1)
         bkeys = {"tokens": (mbs, args.seq_len),
@@ -129,8 +129,12 @@ def main(argv=None):
         if c.family == "encdec":
             bkeys["enc_frames"] = (mbs, c.enc_seq, c.d_model)
         bsh = {k: shd.batch_sharding(plan, s) for k, s in bkeys.items()}
-        step = jax.jit(make_train_step(c, oc, sc, grad_shardings=psh,
+        # pin output shardings to the input placement — without this the
+        # returned params' layout drifts from the placed inputs and every
+        # call after the first recompiles (the dp-scaling collapse)
+        step = jax.jit(make_train_step(c, oc, sc, grad_shardings=gsh,
                                        batch_shardings=bsh),
+                       out_shardings=(psh, osh, None),
                        donate_argnums=(0, 1))
 
         def batch_put(batch):

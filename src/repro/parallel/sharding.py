@@ -298,6 +298,11 @@ def _dp_size(plan: Plan) -> int:
     return n
 
 
+def dp_size(plan: Plan) -> int:
+    """Total data-parallel degree of a plan (product of its dp axes)."""
+    return _dp_size(plan)
+
+
 def make_attn_hints(c: ModelConfig, plan: Plan, batch: int,
                     cache_seq: int = 0, decode: bool = False,
                     seq_len: int = 0):
@@ -394,15 +399,26 @@ def train_state_shardings(plan: Plan, params: Params, opt_state: Params,
     return psh, osh
 
 
+def grad_shardings(plan: Plan, param_shardings_tree, params: Params):
+    """ZeRO-2 gradient-accumulator shardings: the zero1 extra-sharding
+    applied to the grad buffer itself, so each dp rank owns a slice of
+    the accumulated gradients (GSPMD then reduce-scatters each
+    microbatch's contribution instead of all-reducing the full buffer,
+    and the fp32 accumulator stops being replicated over dp)."""
+    return opt_state_shardings(plan, param_shardings_tree, params)
+
+
 def shard_train_state(plan: Plan, params: Params, opt_state: Params,
                       c: Optional[ModelConfig] = None):
     """Place a concrete (params, opt_state) onto the plan's mesh.
 
-    Returns ``(params, opt_state, param_shardings, opt_shardings)`` —
-    the shardings double as ``make_train_step``'s ``grad_shardings``
-    and checkpoint-restore targets. This is the one device-placement
-    path shared by the bench workloads and ``repro.launch.train``.
+    Returns ``(params, opt_state, param_shardings, opt_shardings,
+    grad_shardings)`` — param shardings double as checkpoint-restore
+    targets, grad shardings are the ZeRO-2 dp-sharded accumulator specs
+    for ``make_train_step``. This is the one device-placement path
+    shared by the bench workloads and ``repro.launch.train``.
     """
     psh, osh = train_state_shardings(plan, params, opt_state, c)
+    gsh = grad_shardings(plan, psh, params)
     return (jax.device_put(params, psh), jax.device_put(opt_state, osh),
-            psh, osh)
+            psh, osh, gsh)

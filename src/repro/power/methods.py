@@ -172,7 +172,7 @@ def select_power_methods(prefer: str = "auto", *, n_devices: int = 1,
         if prefer in ("synthetic", "tpu_model"):
             kw["n_devices"] = n_devices
         if prefer == "tpu_model":
-            kw["utilization_fn"] = utilization_fn or (lambda: 1.0)
+            kw["utilization_fn"] = utilization_fn or _roofline_utilization()
         return [METHODS[prefer](**kw)], prefer
     rapl = RaplPower()
     if rapl.available():
@@ -187,5 +187,15 @@ def select_power_methods(prefer: str = "auto", *, n_devices: int = 1,
     if on_tpu:
         return [TPUModelPower(
             n_devices=n_devices,
-            utilization_fn=utilization_fn or (lambda: 1.0))], "tpu_model"
+            utilization_fn=utilization_fn or _roofline_utilization(),
+        )], "tpu_model"
     return [SyntheticPower(n_devices=n_devices)], "synthetic"
+
+
+def _roofline_utilization() -> Callable[[], float]:
+    """Default tpu_model utilization: roofline occupancy of the dry-run
+    artifacts, not the old constant 1.0 (which billed memory-bound steps
+    at full TDP). Falls back to 1.0 — with a logged warning — when no
+    roofline data exists."""
+    from repro.power.utilization import roofline_utilization_fn
+    return roofline_utilization_fn(default=1.0)

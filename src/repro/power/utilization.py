@@ -1,0 +1,69 @@
+"""Utilization sources for the analytic TPU power model.
+
+``TPUModelPower`` converts a utilization fraction into watts
+(``P = idle + (TDP - idle) * u``); this module supplies that fraction
+from the roofline occupancy of the compiled steps (the dry-run
+artifacts under ``artifacts/dryrun/``) instead of the old constant 1.0
+— which billed every modeled run at full TDP regardless of occupancy
+and overreported energy for memory-/collective-bound cells.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import os
+import pathlib
+from typing import Callable, Optional
+
+log = logging.getLogger(__name__)
+
+
+def _dryrun_dir(override: Optional[str] = None) -> pathlib.Path:
+    d = override or os.environ.get("REPRO_DRYRUN_DIR")
+    if d:
+        return pathlib.Path(d)
+    # anchored to the repo root, not the cwd (same convention as the
+    # roofline workload)
+    repo_root = pathlib.Path(__file__).resolve().parents[3]
+    return repo_root / "artifacts" / "dryrun"
+
+
+def roofline_fractions(dryrun_dir=None) -> list[float]:
+    """All finite ``roofline_fraction`` values in the dry-run artifacts
+    (empty when the directory or the field is absent)."""
+    out = []
+    d = _dryrun_dir(dryrun_dir)
+    if not d.is_dir():
+        return out
+    for f in sorted(d.glob("*.json")):
+        try:
+            r = json.loads(f.read_text())
+            frac = float(r["roofline"]["roofline_fraction"])
+        except (OSError, ValueError, TypeError, KeyError,
+                json.JSONDecodeError):
+            continue
+        if 0.0 <= frac:
+            out.append(min(frac, 1.0))
+    return out
+
+
+def roofline_utilization_fn(dryrun_dir=None, default: float = 1.0,
+                            ) -> Callable[[], float]:
+    """A ``TPUModelPower.utilization_fn`` backed by roofline occupancy.
+
+    Averages the ``roofline_fraction`` across the dry-run artifacts —
+    the occupancy of the compiled steps this host would run. Falls back
+    to ``default`` (with a logged warning) when no roofline data exists,
+    so modeled power stays populated on fresh checkouts.
+    """
+    fracs = roofline_fractions(dryrun_dir)
+    if not fracs:
+        log.warning(
+            "tpu_model power: no roofline dry-run artifacts under %s; "
+            "utilization falls back to %.2f (full-TDP billing) — run "
+            "`python -m repro.launch.dryrun` to ground it in occupancy",
+            _dryrun_dir(dryrun_dir), default)
+        u = default
+    else:
+        u = sum(fracs) / len(fracs)
+    return lambda: u

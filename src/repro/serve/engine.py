@@ -204,6 +204,9 @@ class ServeEngine:
             #: the pool can cover every active slot's remaining demand,
             #: so decode-time ``ensure`` growth can never hit CacheOOM.
             self._slot_cap: dict[int, int] = {}
+            #: free-block count snapshotted when admission last deferred
+            #: the queue head; admission only retries once it changes
+            self._defer_free_blocks: Optional[int] = None
             self.caches: Params = None   # allocated on first serve()
 
     # ------------------------------------------------------------------
@@ -307,6 +310,11 @@ class ServeEngine:
         blocks. Because an empty pool always covers one full slot
         (PagedKVCache asserts so), the head request always admits
         eventually: deferral, never deadlock, never ``CacheOOM``.
+
+        A deferral snapshots ``free_blocks``; the serve loop skips the
+        refill/unadmit churn — and stops treating the head as pending
+        for the decode fusion check — until that count changes (blocks
+        only move at window edges, so no retry can succeed earlier).
         """
         ok = []
         for i, slot in enumerate(admitted):
@@ -316,10 +324,18 @@ class ServeEngine:
             if cap > self._paged_headroom():
                 for later in reversed(admitted[i:]):
                     sched.unadmit(later)
+                self._defer_free_blocks = self._paged.free_blocks
                 break
             self._slot_cap[slot.index] = cap
             ok.append(slot)
         return ok
+
+    def _admission_blocked(self) -> bool:
+        """True while a deferred queue head cannot possibly admit: the
+        pool's free-block count hasn't moved since the deferral."""
+        snap = getattr(self, "_defer_free_blocks", None)
+        return (snap is not None and self._paged is not None
+                and self._paged.free_blocks == snap)
 
     # ------------------------------------------------------------------
     # Model-backed serve phases
@@ -380,7 +396,8 @@ class ServeEngine:
                     if self._paged is not None:
                         self._free_paged_slot(slot_index)
 
-    def _decode_plan(self, sched: Scheduler, active) -> int:
+    def _decode_plan(self, sched: Scheduler, active,
+                     admission_blocked: bool = False) -> int:
         """How many decode steps can run before the host must look.
 
         Fused runs are only taken when the scheduler can PROVE no
@@ -390,11 +407,15 @@ class ServeEngine:
         exactly on the window edge), and no admission could happen
         meanwhile (a free slot plus pending work keeps the legacy
         per-token cadence so TTFT never pays for throughput).
+        ``admission_blocked`` marks a headroom-deferred queue head: it
+        cannot admit until a slot finishes and frees blocks, and
+        finishes only land on window edges — so the pending head must
+        not hold the whole pool at per-token cadence.
         """
         if self.decode_window <= 1:
             return 1
         if (len(active) < self.n_slots and sched.n_pending
-                and sched.policy != "fixed"):
+                and not admission_blocked and sched.policy != "fixed"):
             # a free slot could refill mid-window — stay per-token so
             # TTFT never pays for throughput. Under the fixed policy
             # admission waits for ALL slots to drain, so no window can
@@ -524,15 +545,24 @@ class ServeEngine:
         steps: list[StepRecord] = []
         ts: list[float] = []
         ws: list[float] = []
+        if not self._scripted:
+            self._defer_free_blocks = None
         self._sample_power(ts, ws)
 
         while sched.has_work:
             now_rel = self.clock() - t_start
             # -- admission: prefill newly admitted requests ---------------
-            admitted = sched.refill(now_rel)
-            if admitted and not self._scripted \
-                    and self.cache_kind == "paged":
-                admitted = self._admit_paged(sched, admitted)
+            # a headroom-deferred head retries only once free_blocks has
+            # moved — not every loop iteration (re-admit/unadmit churn)
+            if self._admission_blocked():
+                admitted = []
+            else:
+                if not self._scripted:
+                    self._defer_free_blocks = None
+                admitted = sched.refill(now_rel)
+                if admitted and not self._scripted \
+                        and self.cache_kind == "paged":
+                    admitted = self._admit_paged(sched, admitted)
             if admitted and not self._scripted:
                 self._model_prefill_admitted(sched, admitted, results,
                                              steps, ts, ws)
@@ -556,7 +586,9 @@ class ServeEngine:
             # -- decode over all active slots -----------------------------
             active = sched.active_slots()
             if active and not self._scripted:
-                k = self._decode_plan(sched, active)
+                k = self._decode_plan(
+                    sched, active,
+                    admission_blocked=self._admission_blocked())
                 self._model_decode_run(sched, active, k, results,
                                        steps, ts, ws)
             elif active:

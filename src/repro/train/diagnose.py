@@ -1,0 +1,171 @@
+"""dp train-step diagnosis: attribute multi-device scaling loss.
+
+The instrument that found the dp-scaling collapse (ISSUE 6): the jitted
+sharded step had no output-sharding pin, so the returned params' layout
+drifted from the placed inputs and every call after the first
+recompiled (~seconds of XLA work billed into the measured window —
+BENCH_llm_train.json recorded dp2 scaling_efficiency 0.10).
+
+Usage::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
+      python -m repro.train.diagnose --placement dp2
+
+Reports, per step variant:
+
+- **donation/pinning audit** — whether output leaf shardings match the
+  placed inputs (mismatched leaves => per-call resharding churn), and
+  the jit cache size across calls (>1 => recompile churn);
+- **per-call wall time** — call 0 (compile), call 1 (the one a
+  warmup=1 benchmark actually measures), steady state;
+- **collective-vs-compute attribution** — the sync=none variant runs
+  the identical local step without any cross-device reduce, so
+  (variant - none) isolates what gradient synchronization costs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.spec import Placement
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.mesh import mesh_for
+from repro.models import lm
+from repro.parallel import grad_sync as gs
+from repro.parallel import sharding as shd
+from repro.train.optimizer import OptConfig, opt_init
+from repro.train.step import StepConfig, make_train_step
+
+
+def audit_shardings(outputs, expected) -> int:
+    """Count output leaves whose sharding differs from the expected
+    placement — each one is a per-call reshard on the next donation."""
+    mismatched = 0
+    for got, want in zip(jax.tree.leaves(outputs), jax.tree.leaves(expected)):
+        if not got.sharding.is_equivalent_to(want, got.ndim):
+            mismatched += 1
+    return mismatched
+
+
+def _block(tree):
+    jax.block_until_ready(jax.tree.leaves(tree)[0])
+
+
+def time_step(step, args_fn, calls: int = 6):
+    """Per-call wall times + jit cache size. ``args_fn()`` returns fresh
+    (donatable) step arguments each call batchset."""
+    times = []
+    args = args_fn()
+    for _ in range(calls):
+        t0 = time.perf_counter()
+        out = step(*args)
+        _block(out[0])
+        times.append(time.perf_counter() - t0)
+        args = tuple(out[:len(args) - 1]) + (args[-1],)
+    cache = step._cache_size() if hasattr(step, "_cache_size") else -1
+    return times, cache, out
+
+
+def build_variants(placement: str, gb: int, seq: int, k: int):
+    c = get_config("gpt-800m").reduced(d_model=128, n_layers=4, d_ff=512,
+                                       vocab=8192, n_heads=4, n_kv_heads=4,
+                                       d_head=32)
+    oc = OptConfig(warmup=2, total_steps=1000)
+    params = lm.init(jax.random.key(0), c)
+    opt_state = opt_init(oc, params)
+    mesh = mesh_for(Placement.of(placement))
+    plan = shd.make_plan(c, mesh, ShapeConfig("diag", seq, gb, "train"))
+    p_s, o_s, psh, osh, gsh = shd.shard_train_state(plan, params,
+                                                    opt_state, c)
+    toks = jnp.asarray(synthetic_tokens(gb, seq, c.vocab)[:, :seq])
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    batch = jax.device_put(
+        batch, {kk: shd.batch_sharding(plan, v.shape)
+                for kk, v in batch.items()})
+    sc = StepConfig(microbatches=k)
+    mb = gb // k
+    mbsh = {"tokens": shd.batch_sharding(plan, (mb, seq)),
+            "labels": shd.batch_sharding(plan, (mb, seq))}
+
+    def fresh(extra=None):
+        def args_fn():
+            p = jax.device_put(jax.tree.map(jnp.copy, p_s), psh)
+            o = jax.device_put(jax.tree.map(jnp.copy, o_s), osh)
+            if extra is None:
+                return (p, o, batch)
+            return (p, o, extra(), batch)
+        return args_fn
+
+    variants = {}
+    # the pre-fix path: GSPMD step, no out pinning, no donation
+    variants["gspmd-unpinned"] = (
+        jax.jit(make_train_step(c, oc, sc, grad_shardings=psh,
+                                batch_shardings=mbsh)),
+        fresh(), psh)
+    # the fix: pinned outputs + donation + ZeRO-2 grad shardings
+    variants["gspmd-pinned-zero2"] = (
+        jax.jit(make_train_step(c, oc, sc, grad_shardings=gsh,
+                                batch_shardings=mbsh),
+                out_shardings=(psh, osh, None), donate_argnums=(0, 1)),
+        fresh(), psh)
+    for label, sync in (
+            ("bucketed-fp32", gs.GradSyncConfig(mode="fp32")),
+            ("bucketed-fp32-noolap", gs.GradSyncConfig(mode="fp32",
+                                                       overlap=False)),
+            ("bucketed-int8", gs.GradSyncConfig(mode="int8"))):
+        variants[label] = (
+            jax.jit(gs.make_dp_train_step(c, oc, sc, plan=plan, sync=sync),
+                    out_shardings=(psh, osh, gs.sync_state_sharding(plan),
+                                   None),
+                    donate_argnums=(0, 1, 2)),
+            fresh(lambda s=sync: gs.init_sync_state(plan, params, s)), psh)
+    return variants, gb, seq
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--placement", default="dp2")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--calls", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    n = Placement.of(args.placement).n_devices
+    if n > jax.device_count():
+        raise SystemExit(
+            f"placement {args.placement} needs {n} devices; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    variants, gb, seq = build_variants(args.placement, args.global_batch,
+                                       args.seq, args.microbatches)
+    print(f"[diagnose] placement={args.placement} gb={gb} seq={seq} "
+          f"mb={args.microbatches} devices={jax.device_count()}")
+    rows = []
+    for label, (step, args_fn, psh) in variants.items():
+        times, cache, out = time_step(step, args_fn, calls=args.calls)
+        mism = audit_shardings(out[0], psh)
+        steady = sum(times[2:]) / max(len(times) - 2, 1)
+        tps = gb * seq / steady
+        rows.append((label, times[0], times[1], steady, tps, cache, mism))
+        print(f"  {label:22s} call0={times[0]*1e3:8.1f}ms "
+              f"call1={times[1]*1e3:8.1f}ms steady={steady*1e3:8.1f}ms "
+              f"tok/s={tps:9.1f} cache={cache} resharded_leaves={mism}")
+    base = next((r for r in rows if r[0] == "gspmd-unpinned"), None)
+    best = min(rows, key=lambda r: r[3])
+    if base is not None:
+        print(f"[diagnose] call-1 penalty of unpinned step: "
+              f"{(base[2] - best[3])*1e3:.1f}ms over best steady state "
+              f"(recompile churn when cache>1, reshard churn when "
+              f"resharded_leaves>0)")
+    print(f"[diagnose] best steady variant: {best[0]} "
+          f"({best[4]:.1f} tok/s)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

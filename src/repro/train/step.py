@@ -37,6 +37,50 @@ def _split_mb(x: jax.Array, k: int) -> jax.Array:
     return x.reshape(k, x.shape[0] // k, *x.shape[1:])
 
 
+def scan_microbatch_grads(vg, params, batch: dict, k: int, gdt,
+                          *, mb_hook=None, grad_hook=None, acc_hook=None,
+                          hook_state=None, init_grads=None):
+    """Gradient accumulation over ``k`` microbatches via ``jax.lax.scan``.
+
+    ``vg`` is a ``value_and_grad(loss_fn, has_aux=True)``; the per-leaf
+    accumulator dtype is ``gdt``. Three hooks let callers thread per-step
+    behaviour through the scan without owning the loop:
+
+    - ``mb_hook(mb) -> mb`` transforms each microbatch (e.g. re-applying
+      batch-axis sharding constraints lost in the (k, mb) reshape);
+    - ``grad_hook(g, state) -> (g, state)`` runs on each microbatch's raw
+      gradients *before* accumulation — the hook point for an overlapped
+      bucketed all-reduce that syncs microbatch *i*'s contribution while
+      microbatch *i+1*'s backward is still running (state carries e.g.
+      compression error feedback);
+    - ``acc_hook(g_acc) -> g_acc`` runs on the running accumulator (e.g.
+      ZeRO-style sharding constraints).
+
+    Returns ``(grads, hook_state, loss, ce, aux)`` — sums over the k
+    steps; callers divide by ``k`` themselves.
+    """
+    mbs = jax.tree.map(lambda x: _split_mb(x, k), batch)
+    g0 = init_grads
+    if g0 is None:
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+
+    def body(carry, mb):
+        g_acc, hs, l_acc, ce_acc, aux_acc = carry
+        if mb_hook is not None:
+            mb = mb_hook(mb)
+        (l, (ce, aux)), g = vg(params, mb)
+        if grad_hook is not None:
+            g, hs = grad_hook(g, hs)
+        g_acc = jax.tree.map(lambda a, x: a + x.astype(gdt), g_acc, g)
+        if acc_hook is not None:
+            g_acc = acc_hook(g_acc)
+        return (g_acc, hs, l_acc + l, ce_acc + ce, aux_acc + aux), None
+
+    init = (g0, hook_state, 0.0, 0.0, jnp.zeros((), jnp.float32))
+    (grads, hs, loss, ce, aux), _ = jax.lax.scan(body, init, mbs)
+    return grads, hs, loss, ce, aux
+
+
 def make_loss_fn(c: ModelConfig, sc: StepConfig):
     def loss_fn(params: Params, batch: dict):
         logits, aux = lm.forward(
@@ -75,22 +119,14 @@ def make_train_step(c: ModelConfig, oc: OptConfig, sc: StepConfig = StepConfig()
                 lambda g: g.astype(gdt), grads), grad_shardings)
         else:
             k = sc.microbatches
-            mbs = jax.tree.map(lambda x: _split_mb(x, k), batch)
             g0 = constrain(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, gdt), params),
                 grad_shardings)
-
-            def body(carry, mb):
-                g_acc, l_acc, ce_acc, aux_acc = carry
-                mb = constrain(mb, batch_shardings)
-                (l, (ce, aux)), g = vg(params, mb)
-                g_acc = constrain(jax.tree.map(
-                    lambda a, x: a + x.astype(gdt), g_acc, g),
-                    grad_shardings)
-                return (g_acc, l_acc + l, ce_acc + ce, aux_acc + aux), None
-
-            (grads, loss, ce, aux), _ = jax.lax.scan(
-                body, (g0, 0.0, 0.0, jnp.zeros((), jnp.float32)), mbs)
+            grads, _, loss, ce, aux = scan_microbatch_grads(
+                vg, params, batch, k, gdt,
+                mb_hook=lambda mb: constrain(mb, batch_shardings),
+                acc_hook=lambda g: constrain(g, grad_shardings),
+                init_grads=g0)
             grads = jax.tree.map(lambda g: (g / k).astype(jnp.float32), grads)
             loss, ce, aux = loss / k, ce / k, aux / k
 

@@ -338,3 +338,36 @@ def test_deferred_admission_token_streams_match_roomy_pool(setup):
     tight = run(1 + MAX_LEN // BS)          # one slot at a time
     roomy = run(None)                       # full worst-case reservation
     assert tight == roomy
+
+
+def test_deferred_head_does_not_block_fused_windows(setup):
+    """The deferral-fusion bug: a headroom-deferred queue head used to
+    count as 'free slot + pending work', dropping the whole pool to
+    per-token cadence (plus re-admit/unadmit churn every loop) for as
+    long as the deferral lasted. A blocked head cannot admit until a
+    finish frees blocks, and finishes land only on window edges — so
+    the solo resident must still take fused windows."""
+    c, params = setup
+    n_blocks = 1 + MAX_LEN // BS             # one full slot at a time
+    eng = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                      cache="paged", block_size=BS, n_blocks=n_blocks,
+                      decode_window=8)
+    budget = MAX_LEN - PROMPT
+    reqs = [Request(rid=i, prompt=np.zeros(PROMPT, np.int32),
+                    max_new_tokens=budget, arrival_s=0.0)
+            for i in range(2)]
+    out = eng.serve(reqs, policy="continuous")
+    by = out.by_rid()
+    # rid 1 really was deferred for rid 0's whole residency
+    assert by[1].admitted_s >= by[0].finish_s
+    # ...and fused decode windows ran while it waited for blocks
+    solo = [r for r in out.steps if r.kind == "decode"
+            and set(r.rids) == {0} and r.t1 <= by[1].admitted_s]
+    assert solo, "no solo decode windows recorded during the deferral"
+    assert max(r.n_steps for r in solo) > 1, \
+        "deferred head forced per-token cadence on the solo resident"
+    # scheduling change only: outcomes and the pool ledger are untouched
+    assert all(r.finish_reason == "length" and len(r.tokens) == budget
+               for r in out.results)
+    assert eng._paged.free_blocks == n_blocks - 1
+    assert eng._slot_cap == {}

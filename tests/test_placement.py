@@ -193,6 +193,43 @@ def test_stamp_scaling_metrics_against_the_dp1_cell():
     assert r4.metrics["wh_per_token_scaling"] == pytest.approx(0.5)
 
 
+def test_stamp_scaling_metrics_emulation_device_cap():
+    """device_cap=1 (a 1-core host faking N devices): per-device figures
+    normalize by min(n, cap), effective_devices is recorded, and the
+    wh ratio is rescaled by n_eff/n to cancel the synthetic power model
+    billing each fake device as a full chip."""
+    def cell(n, tok_s, tokens_per_wh):
+        return ResultRecord(
+            workload="w", point={"bs": 8, "placement": f"dp{n}"},
+            metrics={"tokens_per_s": tok_s, "tokens_per_wh": tokens_per_wh},
+            power_source="synthetic", placement={"dp": n})
+
+    r1, r2 = cell(1, 100.0, 2.0), cell(2, 190.0, 1.9)
+    stamp_scaling_metrics([r1, r2], device_cap=1)
+    assert r1.metrics["tok_s_per_device"] == 100.0
+    assert "effective_devices" not in r1.metrics      # n_eff == n == 1
+    assert r2.metrics["effective_devices"] == 1
+    assert r2.metrics["tok_s_per_device"] == 190.0    # / n_eff, not / 2
+    assert r2.metrics["scaling_efficiency"] == pytest.approx(1.9)
+    assert r2.metrics["wh_per_token_scaling"] == pytest.approx(
+        (2.0 / 1.9) * 0.5)
+    # a cap at/above the mesh is a no-op — real-hardware semantics
+    r1b, r2b = cell(1, 100.0, 2.0), cell(2, 190.0, 1.9)
+    stamp_scaling_metrics([r1b, r2b], device_cap=8)
+    assert r2b.metrics["tok_s_per_device"] == 95.0
+    assert "effective_devices" not in r2b.metrics
+    assert r2b.metrics["scaling_efficiency"] == pytest.approx(0.95)
+
+
+def test_scaling_floor_violations_flags_collapsed_cells():
+    from repro.bench import scaling_floor_violations
+    recs = _sweep(dp4_tok_s=120.0)                    # dp4 eff 0.3
+    viol = scaling_floor_violations(recs, floor=0.6)
+    assert [(r.point["placement"], round(e, 2)) for r, e in viol] == [
+        ("dp4", 0.3)]
+    assert scaling_floor_violations(_sweep(), floor=0.6) == []
+
+
 def test_stamp_scaling_metrics_without_dp1_twin_stays_silent():
     lone = ResultRecord(workload="w", point={"bs": 8, "placement": "dp4"},
                         metrics={"tokens_per_s": 400.0},

@@ -1,5 +1,6 @@
 """jpwr-analog power measurement: integration properties (hypothesis),
 method plumbing, suffix interpolation, export."""
+import json
 import math
 import time
 
@@ -10,7 +11,9 @@ from repro.power.ctxmgr import MeasuredScope, expand_suffix, get_power
 from repro.power.frame import Frame
 from repro.power.methods import (
     RaplPower, SyntheticPower, TPUModelPower, get_method,
+    select_power_methods,
 )
+from repro.power.utilization import roofline_utilization_fn
 
 
 class FakeClock:
@@ -147,3 +150,46 @@ def test_frame_roundtrip():
     csv = f.to_csv()
     assert csv.splitlines()[0] == "a,b"
     assert len(f) == 2
+
+
+# ---------------------------------------------------------------------------
+# Roofline-grounded utilization for the analytic TPU model (ISSUE 6:
+# the old utilization_fn was a constant 1.0 — full TDP for every cell)
+# ---------------------------------------------------------------------------
+
+
+def _dryrun_artifact(path, frac):
+    path.write_text(json.dumps({"roofline": {"roofline_fraction": frac}}))
+
+
+def test_roofline_utilization_averages_dryrun_fractions(tmp_path):
+    _dryrun_artifact(tmp_path / "a.json", 0.2)
+    _dryrun_artifact(tmp_path / "b.json", 0.6)
+    _dryrun_artifact(tmp_path / "c.json", 7.0)    # clamps to 1.0
+    (tmp_path / "junk.json").write_text("not json")          # skipped
+    (tmp_path / "other.json").write_text('{"no": "roofline"}')
+    fn = roofline_utilization_fn(dryrun_dir=str(tmp_path))
+    assert fn() == pytest.approx((0.2 + 0.6 + 1.0) / 3)
+
+
+def test_roofline_utilization_falls_back_with_warning(tmp_path, caplog):
+    with caplog.at_level("WARNING", logger="repro.power.utilization"):
+        fn = roofline_utilization_fn(dryrun_dir=str(tmp_path / "missing"),
+                                     default=1.0)
+    assert fn() == 1.0
+    assert any("roofline" in r.message for r in caplog.records)
+
+
+def test_tpu_model_selection_wires_roofline_occupancy(tmp_path,
+                                                     monkeypatch):
+    """select_power_methods(prefer='tpu_model') must bill at roofline
+    occupancy, not constant TDP, when dry-run artifacts exist."""
+    monkeypatch.setenv("REPRO_DRYRUN_DIR", str(tmp_path))
+    _dryrun_artifact(tmp_path / "step.json", 0.25)
+    methods, label = select_power_methods("tpu_model", n_devices=2)
+    assert label == "tpu_model"
+    (m,) = methods
+    assert m.utilization_fn() == pytest.approx(0.25)
+    want_w = m.idle_w + (m.tdp_w - m.idle_w) * 0.25
+    assert all(w == pytest.approx(want_w) for w in m.read().values())
+    assert want_w < m.tdp_w                      # no longer full-TDP
