@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-all ci bench bench-smoke bench-serve bench-list \
-        bench-compare bench-promote bench-trajectory
+.PHONY: test test-all ci bench bench-smoke bench-serve bench-slo \
+        bench-list bench-compare bench-promote bench-trajectory
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +24,9 @@ bench-smoke:     ## the smoke-tagged suite on synthetic power (CI gate)
 bench-serve:
 	$(PY) -m repro.bench run --suite serve --tags smoke
 
+bench-slo:       ## multi-tenant SLO goodput + prefix caching sweep
+	$(PY) -m repro.bench run --suite serve_slo --tags smoke
+
 bench-list:
 	$(PY) -m repro.bench list
 
@@ -39,7 +42,7 @@ bench-compare:   ## fresh smoke run gated against the committed baselines
 	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench \
 	    --fail-on-regression --fail-on-missing
 
-WORKLOADS ?= serve llm_train
+WORKLOADS ?= serve llm_train kernels serve_slo
 LABEL ?= local run
 
 # promotion REPLACES the baseline store, so the old->new compare is

@@ -43,7 +43,9 @@ from repro.core.results import atomic_write_text  # noqa: E402
 TRAJECTORY_METRICS = ("decode_tok_s", "tokens_per_s", "images_per_s",
                       "wh_per_token", "occupancy", "speedup_vs_fixed",
                       "speedup_vs_slotted", "tok_s_per_device",
-                      "scaling_efficiency", "wh_per_token_scaling")
+                      "scaling_efficiency", "wh_per_token_scaling",
+                      "us", "ms", "goodput", "ttft_p99", "tpot_p99",
+                      "wh_per_slo_request")
 
 
 def _num(x):

@@ -63,7 +63,38 @@ print(f"dp-scaling smoke: {len(dp2)} dp2 cell(s), "
       f"scaling_efficiency={effs} (floor {FLOOR})")
 EOF
 
-# 3b. Paged decode-attention kernel drill: one serve cell with every
+# 3b. Prefix-caching effectiveness gate (ISSUE 7 acceptance): the
+#     serve_slo smoke run must show the shared_prefix trace's
+#     cache=paged+prefix cell actually hitting the prefix index AND
+#     measurably beating the plain paged twin on TTFT p99 and
+#     Wh-per-SLO-met-request. Thresholds sit well above the measured
+#     ratios (ttft ~0.34x, wh ~0.77x) so only a broken prefix path —
+#     not noise — trips them. Token-stream equality is the pytest
+#     suite's job (tests/test_prefix_cache.py); this gate covers the
+#     performance half of the contract.
+python - <<'EOF'
+import json, sys
+recs = json.load(open("artifacts/ci-bench/serve_slo/results.json"))["records"]
+cells = {(r["point"]["trace"], r["point"]["cache"]): r["metrics"]
+         for r in recs if r["status"] == "ok"}
+base = cells.get(("shared_prefix", "paged"))
+pref = cells.get(("shared_prefix", "paged+prefix"))
+if base is None or pref is None:
+    sys.exit(f"serve_slo shared_prefix cells missing: {sorted(cells)}")
+if pref.get("prefix_hit_requests", 0) <= 0:
+    sys.exit("prefix cache never hit on the shared_prefix trace")
+ttft_ratio = pref["ttft_p99"] / max(base["ttft_p99"], 1e-12)
+wh_ratio = pref["wh_per_slo_request"] / max(base["wh_per_slo_request"], 1e-12)
+if ttft_ratio > 0.8:
+    sys.exit(f"prefix caching stopped helping TTFT p99: ratio {ttft_ratio:.3f}")
+if wh_ratio > 0.95:
+    sys.exit(f"prefix caching stopped helping Wh/SLO-request: "
+             f"ratio {wh_ratio:.3f}")
+print(f"prefix-cache gate: hits={pref['prefix_hit_requests']} "
+      f"ttft_p99 ratio={ttft_ratio:.3f} wh/slo ratio={wh_ratio:.3f}")
+EOF
+
+# 3c. Paged decode-attention kernel drill: one serve cell with every
 #     decode step routed through the Pallas kernel in interpret mode on
 #     CPU (REPRO_PAGED_IMPL=pallas-interpret). This is a correctness
 #     gate only — interpret-mode timings are meaningless, so the run

@@ -83,6 +83,15 @@ COMPARED_METRICS: dict[str, tuple[bool, float]] = {
     "tok_s_per_device": (True, 0.20),
     "scaling_efficiency": (True, 0.20),
     "wh_per_token_scaling": (False, 0.25),
+    # SLO serving (serve_slo / repro.serve.slo) — fraction of requests
+    # meeting their per-tenant TTFT+TPOT targets, tail latency
+    # quantiles, and energy per SLO-met request (the MLPerf-Power
+    # energy-per-useful-inference figure). Tail quantiles get wide
+    # tolerances: a p99 on CPU timing is the noisiest figure gated here.
+    "goodput": (True, 0.15),
+    "ttft_p99": (False, 0.35),
+    "tpot_p99": (False, 0.35),
+    "wh_per_slo_request": (False, 0.30),
 }
 
 

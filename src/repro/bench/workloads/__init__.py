@@ -1,4 +1,4 @@
-"""The seven paper workloads, registered on import.
+"""The paper workloads, registered on import.
 
 Importing this package populates the WorkloadSpec registry; the modules
 must stay side-effect-free beyond registration (no jax device access at
@@ -13,4 +13,5 @@ from repro.bench.workloads import (  # noqa: F401 - registration imports
     resnet50,
     roofline,
     serve,
+    serve_slo,
 )

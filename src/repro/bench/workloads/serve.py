@@ -138,6 +138,10 @@ def build(pt, ctx):
             "overhead_wh": s.overhead_wh,
             "wall_s": s.wall_s,
             "seconds": s.wall_s,
+            # the arrival-process seed rides along so a record is fully
+            # reproducible from its own row (same contract as the
+            # serve_slo workload's trace_seed/trace_hash stamp)
+            "request_seed": SEED,
         }
         # headline ratios. The twin cells are normally already cached
         # (the Space expands cache=slotted before paged and policy=fixed

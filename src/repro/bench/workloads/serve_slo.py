@@ -1,0 +1,174 @@
+"""Multi-tenant SLO serving workload: goodput + Wh-per-SLO-met-request.
+
+The MLPerf-Power framing on top of the continuous-batching engine: drive
+the ServeEngine with seeded multi-tenant traces (``serve.traffic``
+presets — Poisson mixes, MMPP bursts, shared system-prompt populations)
+and score every request against its tenant's TTFT/TPOT SLO
+(``serve.slo``), per (trace x cache) cell:
+
+  goodput             fraction of requests meeting BOTH targets
+  ttft_p99 / tpot_p99 tail latency (nearest-rank, includes queueing)
+  wh_per_slo_request  attributed energy / SLO-met requests — energy
+                      per *useful* inference, the figure the paper's
+                      energy-efficiency story reduces to under SLOs
+
+The ``cache`` axis isolates prefix caching: ``paged`` is the plain
+block-table pool, ``paged+prefix`` adds the block-granular shared-prefix
+index (``PagedKVCache.enable_prefix_cache``) — prompts whose leading
+blocks hit the index adopt the shared KV and prefill only their suffix.
+On the ``shared_prefix`` trace (two assistant tenants sharing a 48-token
+system prompt) that cuts the prefill bucket from 64 to 16 tokens for
+every hit, which shows up directly in ``ttft_p99`` and
+``wh_per_slo_request``; the ``*_vs_paged`` ratios make the win a gated
+record column. Token streams are bit-identical to the non-cached path
+(asserted in tests/test_prefix_cache.py), so the comparison is pure
+performance, never quality.
+
+SLO targets are deliberately generous for the reduced-config CPU cell
+(~10x steady-state latency): goodput sits at 1.0 and acts as a canary —
+only a scheduler stall or admission bug pushes it down — while the
+discriminating signal lives in the tail-latency and energy columns.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.bench.context import Measurement
+from repro.bench.spec import workload
+from repro.configs import get_config
+from repro.core.params import Space
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+from repro.serve.slo import SLO, evaluate_slo
+from repro.serve.traffic import TRACE_NAMES, generate_trace, preset_trace
+
+from repro.bench.workloads.serve import _paged_impl
+
+MAX_LEN = 96            # slot capacity (prompt + budget; see traffic presets)
+BLOCK_SIZE = 16         # paged KV block; shared_prefix pins 3 full blocks
+N_SLOTS = 4
+N_REQUESTS = 96
+N_REQUESTS_SMOKE = 48
+SEED = 0
+
+#: generous CPU-cell targets (~30x the reduced-config steady-state tail:
+#: measured ttft_p99 ~0.06 s, tpot_p99 ~0.003 s). Interactive tenants
+#: get the tight budget; batch-flavored tenants (bursty "batch",
+#: shared_prefix "misc") tolerate double.
+SLO_TIGHT = SLO(ttft_s=2.0, tpot_s=0.2)
+SLO_RELAXED = SLO(ttft_s=4.0, tpot_s=0.4)
+SLO_BY_TENANT = {"batch": SLO_RELAXED, "misc": SLO_RELAXED}
+
+
+def _engine(ctx, arch: str, cache: str) -> ServeEngine:
+    def make():
+        c = get_config(arch).reduced()
+        params = lm.init(jax.random.key(SEED), c)
+        impl, interpret = _paged_impl()
+        engine = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                             cache="paged", block_size=BLOCK_SIZE,
+                             prefix_cache=cache == "paged+prefix",
+                             paged_impl=impl, paged_interpret=interpret,
+                             power_methods=ctx.power_methods)
+        return c, engine
+
+    return ctx.memo(("serve_slo", arch, cache), make)
+
+
+@workload(
+    "serve_slo",
+    analog="multi-tenant SLO serving: goodput + Wh/SLO-met-request "
+           "(MLPerf-Power style), prefix-cached prefill",
+    space=Space({"arch": ["llama3.2-3b"], "trace": list(TRACE_NAMES),
+                 "cache": ["paged", "paged+prefix"]}),
+    smoke={"trace": ["poisson", "shared_prefix"]},
+    tags=("serve", "smoke", "full"),
+    result_columns=["arch", "trace", "cache", "goodput", "ttft_p99",
+                    "tpot_p99", "wh_per_slo_request", "decode_tok_s",
+                    "prefix_hit_requests", "ttft_p99_vs_paged",
+                    "wh_per_slo_vs_paged", "trace_hash", "power_source"],
+    primary_metric="goodput",
+)
+def build(pt, ctx):
+    """Multi-tenant traces x prefix caching, scored against SLOs."""
+    c, engine = _engine(ctx, pt["arch"], pt["cache"])
+    n = N_REQUESTS_SMOKE if ctx.smoke else N_REQUESTS
+    cfg = preset_trace(pt["trace"], n_requests=n, vocab=c.vocab, seed=SEED)
+    requests = generate_trace(cfg)
+    drill = _paged_impl()[1]
+
+    # warm once per (engine, trace): compiles the trace's prefill
+    # buckets and decode programs; repeat=2 lets a prefix engine
+    # register on the first pass and compile every suffix-prefill
+    # (bucket, depth) program on the second. The index is cleared
+    # afterwards, so measured runs start cold either way.
+    warmed = ctx.cache.setdefault("slo_warmed", set())
+    wkey = (pt["arch"], pt["cache"], pt["trace"])
+    if wkey not in warmed:
+        engine.warmup(requests=requests,
+                      repeat=2 if engine.prefix_cache else 1)
+        warmed.add(wkey)
+
+    def run_cell():
+        # same twice-run noise protocol as the serve workload: report
+        # the steady-state second run, turn the pair's throughput
+        # disagreement into the record's same-point noise figure. Each
+        # measured run starts from a cold prefix index so the two runs
+        # (and the promoted baseline) see identical hit sequences.
+        def one_run():
+            engine.reset_prefix_cache()
+            return engine.serve(requests, policy="continuous")
+
+        first = None if drill else one_run().summary
+        out = one_run()
+        s = out.summary
+        if first is not None:
+            pair = sorted((first.decode_tok_s, s.decode_tok_s))
+            spread = ((pair[1] - pair[0]) / ((pair[0] + pair[1]) / 2)
+                      if pair[1] > 0 else 0.0)
+            ctx.last_measurement = Measurement(
+                seconds=s.wall_s, energy_wh=s.attributed_wh,
+                power_source=ctx.power_source, iters=2, warmup=0,
+                rel_spread=spread)
+        report = evaluate_slo(out.results, SLO_BY_TENANT,
+                              default=SLO_TIGHT)
+        metrics = {
+            "goodput": report.goodput,
+            "n_met": report.n_met,
+            "n_requests": report.n_requests,
+            "ttft_p50": report.ttft_p50_s,
+            "ttft_p99": report.ttft_p99_s,
+            "tpot_p50": report.tpot_p50_s,
+            "tpot_p99": report.tpot_p99_s,
+            "wh_per_slo_request": report.wh_per_slo_request,
+            "n_tokens": s.n_tokens,
+            "decode_tok_s": s.decode_tok_s,
+            "wh_per_token": s.wh_per_token,
+            "occupancy": s.mean_occupancy,
+            "wall_s": s.wall_s,
+            "seconds": s.wall_s,
+            # full provenance: the trace is reproducible from its row
+            "trace_seed": SEED,
+            "trace_hash": cfg.config_hash(),
+        }
+        for name, sub in report.per_tenant.items():
+            metrics[f"goodput_{name}"] = sub.goodput
+        if engine.prefix_cache:
+            for key, val in engine.prefix_stats.items():
+                metrics[f"prefix_{key}"] = val
+        # headline ratios against the plain-paged twin cell (the Space
+        # expands cache=paged first, so it is already measured)
+        cells = ctx.cache.setdefault("serve_slo_cells", {})
+        cell_key = (pt["arch"], pt["trace"])
+        cells.setdefault(cell_key, {})[pt["cache"]] = metrics
+        if pt["cache"] == "paged+prefix":
+            base = cells[cell_key].get("paged")
+            if base is not None:   # absent only under --points filters
+                metrics["ttft_p99_vs_paged"] = (
+                    metrics["ttft_p99"] / max(base["ttft_p99"], 1e-9))
+                metrics["wh_per_slo_vs_paged"] = (
+                    metrics["wh_per_slo_request"]
+                    / max(base["wh_per_slo_request"], 1e-12))
+        return metrics
+
+    return {"serve_slo": run_cell}

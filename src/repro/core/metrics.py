@@ -56,6 +56,17 @@ def mfu(model_flops_per_step: float, iter_time_s: float, n_chips: int,
     return model_flops_per_step / (max(iter_time_s, 1e-12) * n_chips * peak)
 
 
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (``q`` in [0, 100]); 0.0 for an empty
+    sequence. The single quantile rule shared by the serve summary and
+    the SLO layer, so p95/p99 figures agree across reports."""
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    i = min(int(q / 100.0 * len(xs)), len(xs) - 1)
+    return xs[i]
+
+
 # ---------------------------------------------------------------------------
 # Serving energy attribution
 # ---------------------------------------------------------------------------
@@ -188,6 +199,6 @@ def serve_summary(results, steps, ts, ws,
         total_energy_wh=total,
         attributed_wh=sum(r.energy_wh for r in results),
         mean_ttft_s=sum(ttfts) / len(ttfts),
-        p95_ttft_s=ttfts[min(int(0.95 * len(ttfts)), len(ttfts) - 1)],
+        p95_ttft_s=percentile(ttfts, 95.0),
         mean_occupancy=occupancy,
     )

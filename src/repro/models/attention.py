@@ -294,12 +294,31 @@ def encoder_kv(c: ModelConfig, p: Params, enc_out: jax.Array):
 
 def prefill_attention(c: ModelConfig, p: Params, x: jax.Array, *,
                       positions: Optional[jax.Array] = None,
-                      impl: str = "repeat", unroll: bool = False):
-    """Causal self-attention that also returns the K/V cache."""
+                      impl: str = "repeat", unroll: bool = False,
+                      prefix_kv: Optional[tuple] = None):
+    """Causal self-attention that also returns the K/V cache.
+
+    ``prefix_kv`` = (pk, pv), each (B, T_pre, Kh, Dh): precomputed KV of
+    a cached prompt prefix (prefix-cached suffix prefill). The queries
+    are the *suffix* tokens at global positions ``T_pre + i`` (the
+    caller passes RoPE ``positions`` with the offset applied); they
+    attend over [prefix KV ++ suffix KV] under the causal mask shifted
+    by ``q_offset=T_pre``. Only the suffix (k, v) is returned for the
+    cache — the prefix blocks already live in the pool.
+    """
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)[None, :]
     q, k, v = qkv_proj(c, p, x, positions if c.use_rope else None)
+    if prefix_kv is not None:
+        pk, pv = prefix_kv
+        t_pre = pk.shape[1]
+        k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        mask = make_causal_mask(s, t_pre + s, c.attn_window,
+                                q_offset=t_pre)[None, None]
+        out = out_proj(p, sdpa(q, k_full, v_full, mask, impl=impl))
+        return out, (k, v)
     out = out_proj(p, attend(c, q, k, v, causal=True, impl=impl,
                              unroll=unroll))
     return out, (k, v)

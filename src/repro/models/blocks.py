@@ -170,26 +170,42 @@ def stack_forward(c: ModelConfig, layers: Params, x: jax.Array, *,
 
 def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
                   impl: str = "repeat", positions=None, enc_kv_stacked=None,
-                  unroll: bool = False):
-    """Full-sequence causal pass that also emits per-layer caches."""
+                  prefix_kv=None, unroll: bool = False):
+    """Full-sequence causal pass that also emits per-layer caches.
+
+    ``prefix_kv`` threads per-layer cached-prefix K/V (stacked like the
+    caches tree: leading axis = n_periods, per-slot ``{"k","v"}`` of
+    shape (B, T_pre, Kh, Dh)) into every attention slot — the suffix
+    prefill of prefix caching. Attention-only stacks: the SSD
+    recurrence/conv state of mamba mixers depends on the whole sequence
+    and cannot skip the prefix.
+    """
     kinds = slot_kinds(c)
+    assert enc_kv_stacked is None or prefix_kv is None
 
     def body(carry, inp):
         x = carry
+        ekv = pkv = None
         if enc_kv_stacked is not None:
             period_params, ekv = inp
+        elif prefix_kv is not None:
+            period_params, pkv = inp
         else:
-            period_params, ekv = inp, None
+            period_params = inp
         caches = {}
         for i, (mixer, ffn) in enumerate(kinds):
             sp = period_params[f"slot{i}"]
             h = apply_norm(c, sp["norm1"], x)
             if mixer == "attn":
-                h, (k, v) = attn.prefill_attention(c, sp["attn"], h,
-                                                   positions=positions,
-                                                   impl=impl, unroll=unroll)
+                h, (k, v) = attn.prefill_attention(
+                    c, sp["attn"], h, positions=positions,
+                    impl=impl, unroll=unroll,
+                    prefix_kv=None if pkv is None else
+                    (pkv[f"slot{i}"]["k"], pkv[f"slot{i}"]["v"]))
                 caches[f"slot{i}"] = {"k": k, "v": v}
             else:
+                assert pkv is None, (
+                    "prefix caching requires attention-only stacks")
                 h, (conv_tail, hstate) = ssm_mod.mamba_forward(
                     c, sp["mamba"], h, return_state=True, unroll=unroll)
                 caches[f"slot{i}"] = {"ssm": hstate, "conv": conv_tail}
@@ -207,7 +223,12 @@ def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
                 x = x + y
         return x, caches
 
-    xs = layers if enc_kv_stacked is None else (layers, enc_kv_stacked)
+    if enc_kv_stacked is not None:
+        xs = (layers, enc_kv_stacked)
+    elif prefix_kv is not None:
+        xs = (layers, prefix_kv)
+    else:
+        xs = layers
     x, caches = jax.lax.scan(body, x, xs, unroll=unroll)
     return x, caches
 

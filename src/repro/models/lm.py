@@ -135,7 +135,8 @@ def forward(c: ModelConfig, p: Params, tokens: jax.Array, *,
 def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
             patch_embeds: Optional[jax.Array] = None,
             enc_frames: Optional[jax.Array] = None, impl: str = "repeat",
-            unroll: bool = False, last_pos: Optional[jax.Array] = None):
+            unroll: bool = False, last_pos: Optional[jax.Array] = None,
+            prefix_kv: Params = None, pos_offset: int = 0):
     """Process the prompt; return (last-position logits, caches, enc_kv).
 
     ``last_pos`` (B,) int32 overrides which position's logits are
@@ -143,13 +144,25 @@ def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
     shared length bucket and reads each request's logits at its *true*
     last token (pad rows are never attended: causal masking hides them
     from real tokens, and decode overwrites them in place).
+
+    ``prefix_kv`` + ``pos_offset`` select the prefix-cached *suffix*
+    prefill: ``tokens`` holds only the suffix (global positions start at
+    ``pos_offset``), ``prefix_kv`` is the stacked per-layer K/V of the
+    cached ``pos_offset``-token prefix (see ``blocks.stack_prefill``),
+    and the returned ``caches`` cover only the suffix.
     """
-    x = _inputs_to_embeds(c, p, tokens, patch_embeds)
+    assert (prefix_kv is None) == (pos_offset == 0)
+    x = _inputs_to_embeds(c, p, tokens, patch_embeds, pos_offset=pos_offset)
     enc_kv = None
     if c.family == "encdec":
         _, enc_kv = encode(c, p, enc_frames, unroll=unroll)
+    positions = None
+    if prefix_kv is not None:
+        positions = jnp.arange(tokens.shape[1])[None, :] + pos_offset
     x, caches = blocks.stack_prefill(c, p["layers"], x, impl=impl,
-                                     enc_kv_stacked=enc_kv, unroll=unroll)
+                                     enc_kv_stacked=enc_kv,
+                                     prefix_kv=prefix_kv,
+                                     positions=positions, unroll=unroll)
     if last_pos is not None:
         x_last = jnp.take_along_axis(
             x, last_pos.astype(jnp.int32)[:, None, None], axis=1)

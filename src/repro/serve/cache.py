@@ -32,6 +32,7 @@ rely on; only "k"/"v" leaves carry the T axis (axis 2) and need growing.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Optional
 
@@ -211,6 +212,131 @@ def insert_paged_rows(caches: Params, rows: Params, blocks: jax.Array,
     return jax.tree_util.tree_map_with_path(put, caches, rows)
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def copy_blocks(caches: Params, src: jax.Array, dst: jax.Array) -> Params:
+    """Copy pool blocks ``src[i] -> dst[i]`` on every attention k/v leaf
+    (the copy-on-write arm of prefix sharing). SSM/conv state leaves are
+    per-slot and pass through. Traced per (len(src),) shape — CoW events
+    are rare (a write into a still-shared block), so the handful of
+    compiled variants is cheap."""
+
+    def cp(path, leaf):
+        if _is_kv(path):
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(cp, caches)
+
+
+@dataclass
+class _PrefixEntry:
+    """One registered full KV block: the chain key addressing its token
+    content, the physical block id, and LRU bookkeeping."""
+
+    key: tuple
+    block: int
+    parent: Optional[tuple]     # chain key of the previous block (depth>0)
+    children: int = 0           # live child entries (evict leaves first)
+    last_used: int = 0
+
+
+class PrefixIndex:
+    """Content-addressed index over full KV blocks (shared prefixes).
+
+    Keys are *cumulative chains*: block ``i`` of a prompt is addressed
+    by ``(key_of_block_{i-1}, tokens[i*bs:(i+1)*bs])`` with ``()`` as
+    the root — nested tuples compared by value, so a hit means the
+    ENTIRE token prefix matches exactly (no hash-collision risk of
+    serving another tenant's KV). Only full blocks are indexed: a
+    partial tail block contains pad-position KV and is never shareable.
+
+    The index itself holds no refcounts — :class:`PagedKVCache` pins
+    one reference per indexed block and reclaims via
+    :meth:`pop_lru_leaf` (leaf-first eviction keeps every remaining
+    entry reachable: evicting an interior block would orphan its
+    descendants into unreachable leaks).
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._entries: dict[tuple, _PrefixEntry] = {}
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def blocks(self) -> list[int]:
+        return [e.block for e in self._entries.values()]
+
+    def match(self, tokens, max_tokens: Optional[int] = None) -> list[int]:
+        """Longest indexed full-block chain prefixing ``tokens``,
+        capped at ``max_tokens`` tokens (the engine caps at
+        ``len(tokens) - 1`` so a fully-cached prompt still has >= 1
+        suffix token to prefill — an empty prefill is impossible).
+        Returns the physical block ids and touches their LRU clocks."""
+        bs = self.block_size
+        limit = len(tokens) if max_tokens is None else min(len(tokens),
+                                                           max_tokens)
+        self._clock += 1
+        key: tuple = ()
+        out: list[int] = []
+        for i in range(limit // bs):
+            key = (key, tuple(int(t) for t in tokens[i * bs:(i + 1) * bs]))
+            e = self._entries.get(key)
+            if e is None:
+                break
+            e.last_used = self._clock
+            out.append(e.block)
+        return out
+
+    def register(self, tokens, block_ids) -> list[int]:
+        """Index the full blocks of a prompt held in ``block_ids``
+        (position order). Chains already present are kept (dedup — the
+        first registrant's block stays canonical); returns the block ids
+        of NEWLY created entries, which the caller must pin (+1 ref)."""
+        bs = self.block_size
+        n_full = min(len(tokens) // bs, len(block_ids))
+        self._clock += 1
+        key: tuple = ()
+        new: list[int] = []
+        for i in range(n_full):
+            pkey, key = key, (
+                key, tuple(int(t) for t in tokens[i * bs:(i + 1) * bs]))
+            e = self._entries.get(key)
+            if e is None:
+                e = _PrefixEntry(key=key, block=int(block_ids[i]),
+                                 parent=pkey if i else None,
+                                 last_used=self._clock)
+                if i:
+                    self._entries[pkey].children += 1
+                self._entries[key] = e
+                new.append(e.block)
+            else:
+                e.last_used = self._clock
+        return new
+
+    def pop_lru_leaf(self) -> Optional[_PrefixEntry]:
+        """Remove and return the least-recently-used *leaf* entry (no
+        children), or None when the index is empty. The caller unpins
+        the returned block."""
+        leaves = [e for e in self._entries.values() if e.children == 0]
+        if not leaves:
+            return None
+        e = min(leaves, key=lambda x: x.last_used)
+        del self._entries[e.key]
+        if e.parent is not None:
+            parent = self._entries.get(e.parent)
+            if parent is not None:
+                parent.children -= 1
+        return e
+
+    def pop_all(self) -> list[int]:
+        """Drain the index; returns every indexed block id (to unpin)."""
+        out = self.blocks()
+        self._entries.clear()
+        return out
+
+
 class PagedKVCache:
     """Block-table KV cache: device pools + host allocator.
 
@@ -276,6 +402,11 @@ class PagedKVCache:
         self._dirty = False
         self._free = list(range(total - 1, 0, -1))   # block 0 = trash
         self._owned: list[list[int]] = [[] for _ in range(n_slots)]
+        #: per-block reference count: one per owning slot (shared-prefix
+        #: adoption makes that >1) plus one per prefix-index entry. A
+        #: block returns to the free list only at refcount zero.
+        self._ref = [0] * total
+        self._prefix: Optional[PrefixIndex] = None
 
     # -- allocator -------------------------------------------------------
     @property
@@ -291,28 +422,162 @@ class PagedKVCache:
         return max((len(o) for o in self._owned), default=1) or 1
 
     def ensure(self, slot: int, n_tokens: int) -> None:
-        """Grow ``slot`` to hold ``n_tokens`` total tokens."""
+        """Grow ``slot`` to hold ``n_tokens`` total tokens.
+
+        When the free list is empty but the prefix index pins
+        reclaimable blocks (index-only references), LRU index entries
+        are evicted first — cached prefixes are an opportunistic use of
+        spare capacity and must never starve live requests."""
         assert n_tokens <= self.max_len, (n_tokens, self.max_len)
         need = -(-n_tokens // self.block_size)
         owned = self._owned[slot]
         while len(owned) < need:
-            if not self._free:
+            if not self._free and not self._reclaim_prefix_block():
                 raise CacheOOM(
                     f"paged pool exhausted: slot {slot} needs block "
                     f"{len(owned) + 1}/{need}, 0 of {self.n_blocks} free")
             blk = self._free.pop()
+            self._ref[blk] = 1
             self.tables_np[slot, len(owned)] = blk
             owned.append(blk)
             self._dirty = True
 
     def free(self, slot: int) -> None:
-        """Return a finished slot's blocks; its table row reverts to the
-        trash block so in-flight rides write harmlessly."""
+        """Drop the slot's references; blocks whose refcount hits zero
+        return to the free list (a block still shared by another slot or
+        pinned by the prefix index stays live). The table row reverts to
+        the trash block so in-flight rides write harmlessly."""
         if self._owned[slot]:
-            self._free.extend(reversed(self._owned[slot]))
+            for blk in reversed(self._owned[slot]):
+                self._ref[blk] -= 1
+                assert self._ref[blk] >= 0, (slot, blk)
+                if self._ref[blk] == 0:
+                    self._free.append(blk)
             self._owned[slot] = []
             self.tables_np[slot] = 0
             self._dirty = True
+
+    def adopt(self, slot: int, block_ids) -> None:
+        """Attach existing (prefix) blocks to ``slot`` — shared, read-
+        only reuse: each block gains a reference and fills the next
+        table columns. Must precede ``ensure`` for the slot (prefix
+        blocks come first in position order)."""
+        owned = self._owned[slot]
+        assert not owned, f"adopt into non-empty slot {slot}"
+        for blk in block_ids:
+            blk = int(blk)
+            assert self._ref[blk] > 0, f"adopting dead block {blk}"
+            self._ref[blk] += 1
+            self.tables_np[slot, len(owned)] = blk
+            owned.append(blk)
+        if owned:
+            self._dirty = True
+
+    def make_writable(self, slot: int, pos: int,
+                      n_tokens: int = 1) -> tuple[list[int], list[int]]:
+        """Copy-on-write: ensure the blocks covering writes at positions
+        ``[pos, pos + n_tokens)`` are exclusively owned by ``slot``.
+
+        Shared blocks (refcount > 1) in the write range are replaced by
+        fresh allocations; returns the ``(src, dst)`` block-id pairs the
+        caller must copy on device (:func:`copy_blocks`) before writing.
+        Under the engine's block-aligned prefix sharing a decode write
+        never lands in a shared block (prefixes are whole blocks and
+        writes start at ``prompt_len > prefix_len``), so this is the
+        safety net that makes divergent writes *correct* rather than a
+        hot path."""
+        bs = self.block_size
+        owned = self._owned[slot]
+        src: list[int] = []
+        dst: list[int] = []
+        for bi in range(pos // bs, (pos + n_tokens - 1) // bs + 1):
+            assert bi < len(owned), (slot, pos, n_tokens, len(owned))
+            old = owned[bi]
+            if self._ref[old] <= 1:
+                continue
+            if not self._free and not self._reclaim_prefix_block():
+                raise CacheOOM(
+                    f"paged pool exhausted during copy-on-write for slot "
+                    f"{slot} block {bi}")
+            new = self._free.pop()
+            self._ref[new] = 1
+            self._ref[old] -= 1
+            owned[bi] = new
+            self.tables_np[slot, bi] = new
+            self._dirty = True
+            src.append(old)
+            dst.append(new)
+        return src, dst
+
+    # -- prefix caching --------------------------------------------------
+    @property
+    def reclaimable_blocks(self) -> int:
+        """Blocks held ONLY by the prefix index — evictable on demand,
+        so admission control may treat them as headroom."""
+        if self._prefix is None:
+            return 0
+        return sum(1 for blk in self._prefix.blocks() if self._ref[blk] == 1)
+
+    @property
+    def available_blocks(self) -> int:
+        """Free blocks plus index-only (reclaimable) blocks: the figure
+        admission control must budget against — counting only
+        ``free_blocks`` would let a fully-pinned index defer the queue
+        head forever even though ``ensure`` can always reclaim."""
+        return len(self._free) + self.reclaimable_blocks
+
+    def enable_prefix_cache(self) -> None:
+        if self._prefix is None:
+            self._prefix = PrefixIndex(self.block_size)
+
+    @property
+    def prefix_index(self) -> Optional[PrefixIndex]:
+        return self._prefix
+
+    def prefix_match(self, tokens) -> list[int]:
+        """Longest cached full-block chain prefixing ``tokens``, capped
+        at ``len(tokens) - 1`` tokens so at least one suffix token
+        remains to prefill. Returns physical block ids for ``adopt``."""
+        if self._prefix is None:
+            return []
+        return self._prefix.match(tokens, max_tokens=len(tokens) - 1)
+
+    def prefix_register(self, slot: int, tokens) -> int:
+        """Index ``slot``'s full prompt blocks for future sharing; each
+        newly indexed block gains the index's pin reference. Returns the
+        number of blocks newly registered."""
+        if self._prefix is None:
+            return 0
+        n_full = len(tokens) // self.block_size
+        new = self._prefix.register(tokens, self._owned[slot][:n_full])
+        for blk in new:
+            self._ref[blk] += 1
+        return len(new)
+
+    def _reclaim_prefix_block(self) -> bool:
+        """Evict LRU leaf index entries until one block actually returns
+        to the free list (an evicted entry's block may still be shared
+        with a live slot). False when the index has nothing left."""
+        if self._prefix is None:
+            return False
+        while True:
+            e = self._prefix.pop_lru_leaf()
+            if e is None:
+                return False
+            self._ref[e.block] -= 1
+            if self._ref[e.block] == 0:
+                self._free.append(e.block)
+                return True
+
+    def clear_prefix(self) -> None:
+        """Drop every index entry (unpin; free refcount-zero blocks) —
+        the engine's between-runs reset so measured cells start cold."""
+        if self._prefix is None:
+            return
+        for blk in self._prefix.pop_all():
+            self._ref[blk] -= 1
+            if self._ref[blk] == 0:
+                self._free.append(blk)
 
     def block_ids(self, slot: int, n_tokens: int) -> np.ndarray:
         """(ceil(n_tokens/bs),) physical ids covering [0, n_tokens)."""

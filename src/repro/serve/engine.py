@@ -63,7 +63,8 @@ from repro.core.metrics import (
 from repro.core.runner import StragglerWatchdog
 from repro.models import lm
 from repro.serve.cache import (
-    PagedKVCache, grow_caches, insert_paged_rows, insert_rows, slotted_cache,
+    PagedKVCache, _is_kv, copy_blocks, grow_caches, insert_paged_rows,
+    insert_rows, slotted_cache,
 )
 from repro.serve.requests import Request, RequestResult
 from repro.serve.scheduler import Scheduler, Slot, StepRecord
@@ -146,6 +147,7 @@ class ServeEngine:
                  donate: bool = True,
                  cache: str = "slotted", block_size: int = 16,
                  n_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
                  decode_window: int = 8,
                  paged_impl: str = "xla", paged_interpret: bool = False,
                  prefill_fn: Optional[Callable] = None,
@@ -155,13 +157,17 @@ class ServeEngine:
                  power_methods: Sequence = (),
                  watchdog: Optional[StragglerWatchdog] = None):
         assert cache in ("slotted", "paged"), cache
+        assert not prefix_cache or cache == "paged", (
+            "prefix caching shares KV blocks — requires the paged cache")
         self.c, self.params = c, params
         self.n_slots, self.max_len = n_slots, max_len
         self.cache_kind = cache
         self.block_size = block_size
         self._n_blocks = n_blocks
+        self.prefix_cache = prefix_cache
         self.decode_window = max(int(decode_window), 1)
         self.paged_impl, self.paged_interpret = paged_impl, paged_interpret
+        self.impl_prefill = impl_prefill
         self.impl_decode, self.donate = impl_decode, donate
         self.clock = clock
         self.sleep_fn = sleep_fn or time.sleep
@@ -198,6 +204,8 @@ class ServeEngine:
             self._serve_step = jax.jit(
                 serve_step, donate_argnums=(2,) if donate else ())
             self._paged_steps: dict = {}
+            self._prefix_prefills: dict = {}
+            self.prefix_stats: dict = self._blank_prefix_stats()
             self._paged: Optional[PagedKVCache] = None
             #: admission-control ledger: slot -> worst-case block demand
             #: (prompt + full token budget). Admission only proceeds when
@@ -225,6 +233,12 @@ class ServeEngine:
                                        self.params,
                                        block_size=self.block_size,
                                        n_blocks=self._n_blocks)
+            if self.prefix_cache:
+                assert self.c.family not in ("ssm", "hybrid"), (
+                    "prefix caching skips prefix recompute — impossible "
+                    "for mamba recurrences, which must run through the "
+                    "whole sequence (attention-only families)")
+                self._paged.enable_prefix_cache()
             # the engine takes ownership of the device tree: the jitted
             # serve programs donate it in place, which would leave the
             # PagedKVCache attribute pointing at deleted buffers — clear
@@ -254,6 +268,44 @@ class ServeEngine:
             fn = jax.jit(step, donate_argnums=(2,) if self.donate else ())
             self._paged_steps[nb] = fn
         return fn
+
+    def _prefix_prefill_fn(self, bucket: int, npre: int):
+        """Suffix-prefill program for prompts whose first ``npre`` blocks
+        hit the prefix index: gathers the cached prefix K/V straight out
+        of the paged pool (per-row block lists, inside the jitted
+        program), prefills only the ``bucket``-padded suffix against it,
+        and returns suffix cache rows. One compiled program per
+        (suffix bucket, prefix depth) pair. The pool is read, never
+        donated — the suffix rows scatter in via ``insert_paged_rows``
+        afterwards, exactly like a cold prefill."""
+        key = (bucket, npre)
+        fn = self._prefix_prefills.get(key)
+        if fn is None:
+            c, bs, kp = self.c, self.block_size, self.n_slots
+            impl = self.impl_prefill
+
+            def prefill_hit(params, caches, tokens, last, pre_blocks):
+                def gather(path, leaf):
+                    if not _is_kv(path):
+                        return leaf
+                    g = jnp.take(leaf, pre_blocks.reshape(-1), axis=1)
+                    return g.reshape((leaf.shape[0], kp, npre * bs)
+                                     + leaf.shape[3:])
+                pkv = jax.tree_util.tree_map_with_path(gather, caches)
+                logits, rows, _ = lm.prefill(c, params, tokens, impl=impl,
+                                             last_pos=last, prefix_kv=pkv,
+                                             pos_offset=npre * bs)
+                first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                return first, rows
+
+            fn = jax.jit(prefill_hit)
+            self._prefix_prefills[key] = fn
+        return fn
+
+    @staticmethod
+    def _blank_prefix_stats() -> dict:
+        return {"hit_requests": 0, "miss_requests": 0,
+                "reused_blocks": 0, "registered_blocks": 0}
 
     def _nb_bucket(self, n: int) -> int:
         """Static gather width for ``n`` live blocks: the next power of
@@ -294,10 +346,13 @@ class ServeEngine:
 
     def _paged_headroom(self) -> int:
         """Free blocks not yet spoken for by active slots' worst-case
-        growth (their cap minus what they already own)."""
+        growth (their cap minus what they already own). Blocks pinned
+        only by the prefix index count as available: ``ensure`` reclaims
+        them LRU-first when the free list runs dry, so a warm index can
+        never starve admission."""
         reserved = sum(max(0, cap - self._paged.owned(s))
                        for s, cap in self._slot_cap.items())
-        return self._paged.free_blocks - reserved
+        return self._paged.available_blocks - reserved
 
     def _admit_paged(self, sched: Scheduler, admitted: list) -> list:
         """Defer admissions an oversubscribed pool cannot reserve.
@@ -324,7 +379,7 @@ class ServeEngine:
             if cap > self._paged_headroom():
                 for later in reversed(admitted[i:]):
                     sched.unadmit(later)
-                self._defer_free_blocks = self._paged.free_blocks
+                self._defer_free_blocks = self._paged.available_blocks
                 break
             self._slot_cap[slot.index] = cap
             ok.append(slot)
@@ -335,7 +390,7 @@ class ServeEngine:
         pool's free-block count hasn't moved since the deferral."""
         snap = getattr(self, "_defer_free_blocks", None)
         return (snap is not None and self._paged is not None
-                and self._paged.free_blocks == snap)
+                and self._paged.available_blocks == snap)
 
     # ------------------------------------------------------------------
     # Model-backed serve phases
@@ -344,44 +399,83 @@ class ServeEngine:
     def _model_prefill_admitted(self, sched: Scheduler, admitted, results,
                                 steps, ts, ws):
         """Prefill newly admitted slots as one padded batch per
-        prompt-length bucket; one host fetch returns every first token."""
-        groups: dict[int, list[Slot]] = {}
+        (suffix-bucket, prefix-depth) group; one host fetch returns
+        every first token.
+
+        With prefix caching on, each prompt is first matched against the
+        prefix index: a hit of ``npre`` full blocks adopts those shared
+        pool blocks (refcounted, never copied) and prefills ONLY the
+        remaining suffix — the jitted program gathers the prefix K/V out
+        of the pool and attends across [prefix ++ suffix]. Every prompt
+        then registers its own full blocks so later requests can hit
+        them. Misses (npre=0) take the exact cold path."""
+        use_prefix = (self.prefix_cache and self.cache_kind == "paged")
+        groups: dict[tuple, list] = {}
         for slot in admitted:
-            bucket = self._prompt_bucket(slot.request.prompt_len)
-            groups.setdefault(bucket, []).append(slot)
-        for bucket, slots in sorted(groups.items()):
+            pre: list = []
+            if use_prefix:
+                pre = self._paged.prefix_match(
+                    [int(t) for t in slot.request.prompt])
+            npre = len(pre)
+            suffix = slot.request.prompt_len - npre * self.block_size
+            bucket = self._prompt_bucket(suffix)
+            groups.setdefault((bucket, npre), []).append((slot, pre))
+        for (bucket, npre), entries in sorted(groups.items()):
             kp = self.n_slots       # fixed batch: admission never retraces
+            pre_len = npre * self.block_size
             t0 = self.clock()
             self._sample_power(ts, ws)   # bracket the prefill window
             tokens = np.zeros((kp, bucket), np.int32)
             last = np.zeros((kp,), np.int32)
             slot_ids = np.full((kp,), self.n_slots, np.int32)  # pad: dropped
-            for i, slot in enumerate(slots):
+            # pad rows gather the trash block — harmless, never read back
+            pre_blocks = np.zeros((kp, npre), np.int32)
+            for i, (slot, pre) in enumerate(entries):
                 plen = slot.request.prompt_len
-                tokens[i, :plen] = np.asarray(slot.request.prompt, np.int32)
-                last[i] = plen - 1
+                prompt = np.asarray(slot.request.prompt, np.int32)
+                tokens[i, :plen - pre_len] = prompt[pre_len:]
+                last[i] = plen - pre_len - 1
                 slot_ids[i] = slot.index
-            first, rows = self._serve_prefill(self.params,
-                                              jnp.asarray(tokens),
-                                              jnp.asarray(last))
+                if npre:
+                    pre_blocks[i] = pre
+            if npre:
+                first, rows = self._prefix_prefill_fn(bucket, npre)(
+                    self.params, self.caches, jnp.asarray(tokens),
+                    jnp.asarray(last), jnp.asarray(pre_blocks))
+            else:
+                first, rows = self._serve_prefill(self.params,
+                                                  jnp.asarray(tokens),
+                                                  jnp.asarray(last))
             if self.cache_kind == "paged":
                 nbk = -(-bucket // self.block_size)
                 blocks = np.full((kp, nbk), self._paged.n_blocks, np.int32)
-                for i, slot in enumerate(slots):
+                for i, (slot, pre) in enumerate(entries):
                     plen = slot.request.prompt_len
+                    if npre:
+                        self._paged.adopt(slot.index, pre)
                     self._paged.ensure(slot.index, plen)
-                    own = self._paged.block_ids(slot.index, plen)
+                    own = self._paged.block_ids(slot.index, plen)[npre:]
                     blocks[i, :len(own)] = own
                 self.caches = insert_paged_rows(
                     self.caches, rows, jnp.asarray(blocks),
                     jnp.asarray(slot_ids), block_size=self.block_size)
+                if use_prefix:
+                    st = self.prefix_stats
+                    st["hit_requests" if npre else
+                       "miss_requests"] += len(entries)
+                    st["reused_blocks"] += npre * len(entries)
+                    for slot, _pre in entries:
+                        st["registered_blocks"] += self._paged.prefix_register(
+                            slot.index,
+                            [int(t) for t in slot.request.prompt])
             else:
                 self.caches = insert_rows(self.caches, rows,
                                           jnp.asarray(slot_ids))
             first_np = np.asarray(first)      # single batched device fetch
             t1 = self.clock()
             self._sample_power(ts, ws)
-            rids = tuple(s.request.rid for s in slots)
+            rids = tuple(s.request.rid for s, _pre in entries)
+            slots = [s for s, _pre in entries]
             steps.append(StepRecord("prefill", t0, t1, rids, len(rids)))
             for i, slot in enumerate(slots):
                 res = results[slot.request.rid]
@@ -436,6 +530,23 @@ class ServeEngine:
         if self.cache_kind == "paged":
             for s in active:
                 self._paged.ensure(s.index, s.pos + k)
+            if self.prefix_cache:
+                # copy-on-write net: decode writes land at pos >=
+                # prompt_len, past every registered (full, block-aligned)
+                # prefix block, so this is structurally a no-op today —
+                # but if a shared block ever ends up under a write
+                # cursor, it is copied out here instead of corrupting
+                # every other reader of that block.
+                srcs: list = []
+                dsts: list = []
+                for s in active:
+                    sc, dc = self._paged.make_writable(s.index, s.pos, k)
+                    srcs += sc
+                    dsts += dc
+                if srcs:
+                    self.caches = copy_blocks(
+                        self.caches, jnp.asarray(srcs, jnp.int32),
+                        jnp.asarray(dsts, jnp.int32))
             tables = self._paged.device_tables()
             step = self._paged_step_fn(self._nb_bucket(self._paged.max_owned()))
             extra = (tables,)
@@ -485,25 +596,46 @@ class ServeEngine:
     # Warmup (compile outside any measured window)
     # ------------------------------------------------------------------
 
-    def warmup(self, prompt_len: int = 8):
+    def warmup(self, prompt_len: int = 8,
+               requests: Optional[Sequence[Request]] = None,
+               repeat: int = 1):
         """Compile every serve program this engine can reach: the
         prompt-bucket prefill, the insert, and each decode program
         (every paged gather bucket gets crossed as the warmup requests
         grow to full slot capacity). Power sampling and the straggler
-        watchdog are detached so warmup never pollutes measurement."""
+        watchdog are detached so warmup never pollutes measurement.
+
+        Pass the measured ``requests`` (and ``repeat=2``) to warm a
+        prefix-cached engine: the first pass registers prefixes, the
+        second takes the hit path, so every suffix-prefill program
+        compiles before measurement. The prefix index is cleared
+        afterwards — measured runs start from a cold index either way.
+        """
         if self._scripted:
             return
-        budget = max(self.max_len - prompt_len, 1)
-        reqs = [Request(rid=-(i + 1),
-                        prompt=np.zeros(prompt_len, np.int32),
-                        max_new_tokens=budget, arrival_s=0.0)
-                for i in range(self.n_slots)]
+        if requests is None:
+            budget = max(self.max_len - prompt_len, 1)
+            requests = [Request(rid=-(i + 1),
+                                prompt=np.zeros(prompt_len, np.int32),
+                                max_new_tokens=budget, arrival_s=0.0)
+                        for i in range(self.n_slots)]
         saved = self.power_methods, self.watchdog
         self.power_methods, self.watchdog = [], None
         try:
-            self.serve(reqs, policy="continuous")
+            for _ in range(max(int(repeat), 1)):
+                self.serve(requests, policy="continuous")
         finally:
             self.power_methods, self.watchdog = saved
+            self.reset_prefix_cache()
+
+    def reset_prefix_cache(self):
+        """Drop every prefix-index entry (freeing index-only blocks) and
+        zero the hit counters — each measured run starts cold."""
+        if not self._scripted and self._paged is not None \
+                and self.prefix_cache:
+            self._paged.clear_prefix()
+        if not self._scripted:
+            self.prefix_stats = self._blank_prefix_stats()
 
     # ------------------------------------------------------------------
     # Continuous-batching run loop
@@ -541,12 +673,14 @@ class ServeEngine:
             sched.submit(r)
             results[r.rid] = RequestResult(
                 rid=r.rid, prompt_len=r.prompt_len,
-                arrival_s=t_start + r.arrival_s)
+                arrival_s=t_start + r.arrival_s,
+                tenant=getattr(r, "tenant", ""))
         steps: list[StepRecord] = []
         ts: list[float] = []
         ws: list[float] = []
         if not self._scripted:
             self._defer_free_blocks = None
+            self.prefix_stats = self._blank_prefix_stats()
         self._sample_power(ts, ws)
 
         while sched.has_work:

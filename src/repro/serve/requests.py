@@ -32,6 +32,7 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0
     eos_id: Optional[int] = None        # None -> run to max_new_tokens
+    tenant: str = ""                    # multi-tenant traces (serve.traffic)
 
     @property
     def prompt_len(self) -> int:
@@ -52,6 +53,7 @@ class RequestResult:
     finish_reason: str = ""             # "eos" | "length"
     slot: int = -1
     energy_wh: float = 0.0              # attributed by core.metrics
+    tenant: str = ""                    # copied from the request
 
     # -- latency figures of merit ---------------------------------------
     @property
@@ -72,6 +74,15 @@ class RequestResult:
         return self.finish_s - self.arrival_s
 
     @property
+    def tpot_s(self) -> float:
+        """Time per output token over the decode phase (TPOT): the
+        steady-state inter-token latency after the first token. 0.0 for
+        single-token results (no decode phase to time)."""
+        if self.n_tokens <= 1:
+            return 0.0
+        return (self.finish_s - self.first_token_s) / (self.n_tokens - 1)
+
+    @property
     def decode_tok_s(self) -> float:
         """Steady-state decode rate (excludes queueing and prefill)."""
         gen_window = self.finish_s - self.first_token_s
@@ -89,6 +100,18 @@ class RequestResult:
         return self.n_tokens / self.energy_wh if self.energy_wh > 0 else 0.0
 
 
+def exponential_arrivals(rng: np.random.Generator, n: int,
+                         rate_hz: float) -> np.ndarray:
+    """Seeded Poisson arrival times: exponential inter-arrival gaps at
+    ``rate_hz``, shifted so the first request arrives at t=0. The single
+    arrival-process primitive shared by :func:`poisson_requests` and the
+    multi-tenant trace generator (``serve.traffic``) — it consumes
+    exactly ``n`` exponential draws from ``rng``, so the legacy
+    ``poisson_requests`` stream is bit-identical to before the split."""
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    return np.cumsum(gaps) - gaps[0]
+
+
 def poisson_requests(n: int, rate_hz: float, vocab: int, *,
                      prompt_len: int = 8, seed: int = 0,
                      short: tuple[int, int] = (2, 8),
@@ -104,8 +127,7 @@ def poisson_requests(n: int, rate_hz: float, vocab: int, *,
 
     rng = np.random.default_rng(seed)
     prompts = synthetic_tokens(n, prompt_len, vocab, seed)[:, :prompt_len]
-    gaps = rng.exponential(1.0 / rate_hz, size=n)
-    arrivals = np.cumsum(gaps) - gaps[0]   # first request arrives at t=0
+    arrivals = exponential_arrivals(rng, n, rate_hz)
     is_long = rng.random(n) < p_long
     budgets = np.where(is_long,
                        rng.integers(long[0], long[1] + 1, size=n),

@@ -50,7 +50,8 @@ def test_duplicate_registration_rejected():
 
 
 def test_tag_filtering():
-    assert [s.name for s in iter_workloads(tags=["serve"])] == ["serve"]
+    assert [s.name for s in iter_workloads(tags=["serve"])] \
+        == ["serve", "serve_slo"]
     assert [s.name for s in iter_workloads(tags=["vision"])] == ["resnet50"]
     smoke = {s.name for s in iter_workloads(tags=["smoke"])}
     assert set(SEVEN) <= smoke        # every paper workload has a smoke run

@@ -1,0 +1,296 @@
+"""Prefix caching: index semantics, refcounted sharing, CoW, equivalence.
+
+The contract mirrors test_paged_serve: prefix caching is a *performance*
+feature — adopting shared KV blocks and prefilling only the suffix must
+be invisible in the token streams. Float32 model for exact argmax
+equality; allocator tests run host-side on abstract params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.cache import (
+    CacheOOM, PagedKVCache, PrefixIndex, copy_blocks,
+)
+from repro.serve.engine import ServeEngine
+from repro.serve.traffic import TenantSpec, TraceConfig, generate_trace
+
+N_SLOTS, MAX_LEN, BS = 3, 64, 16
+
+_CONFIG = get_config("llama3.2-3b").reduced(dtype="float32",
+                                            param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _CONFIG, lm.init(jax.random.key(0), _CONFIG)
+
+
+def _blank_cache(**kw):
+    cache = PagedKVCache(_CONFIG, N_SLOTS, MAX_LEN, None, block_size=BS,
+                         **kw)
+    cache.enable_prefix_cache()
+    return cache
+
+
+def _toks(seed, n):
+    return np.random.default_rng(seed).integers(1, 500, n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex (pure host)
+# ---------------------------------------------------------------------------
+
+
+def test_index_match_register_roundtrip():
+    idx = PrefixIndex(BS)
+    toks = _toks(0, 3 * BS + 5)
+    new = idx.register(toks, [10, 11, 12])
+    assert new == [10, 11, 12] and len(idx) == 3
+    assert idx.match(toks) == [10, 11, 12]
+    # a diverging last block matches only the common chain
+    fork = toks[: 2 * BS] + _toks(1, BS)
+    assert idx.match(fork) == [10, 11]
+    # a different first token matches nothing (exact-chain keys)
+    assert idx.match([999] + toks[1:]) == []
+
+
+def test_index_match_cap_leaves_suffix():
+    idx = PrefixIndex(BS)
+    toks = _toks(2, 2 * BS)
+    idx.register(toks, [7, 8])
+    # uncapped: both blocks; capped at len-1: a fully-cached prompt
+    # still leaves >= 1 token to prefill
+    assert idx.match(toks) == [7, 8]
+    assert idx.match(toks, max_tokens=len(toks) - 1) == [7]
+
+
+def test_index_register_dedups_first_registrant_wins():
+    idx = PrefixIndex(BS)
+    toks = _toks(3, 2 * BS)
+    assert idx.register(toks, [5, 6]) == [5, 6]
+    # same content from other physical blocks: no new entries, the
+    # canonical blocks stay
+    assert idx.register(toks, [8, 9]) == []
+    assert idx.match(toks) == [5, 6]
+    # extending the chain registers only the new depth
+    longer = toks + _toks(4, BS)
+    assert idx.register(longer, [8, 9, 10]) == [10]
+
+
+def test_index_lru_leaf_eviction_never_orphans():
+    idx = PrefixIndex(BS)
+    a = _toks(5, 2 * BS)
+    idx.register(a, [1, 2])               # chain 1 -> 2
+    b = _toks(6, BS)
+    idx.register(b, [3])                  # independent root
+    idx.match(b)                          # touch b: 2 is now LRU leaf
+    e = idx.pop_lru_leaf()
+    assert e.block == 2                   # the interior block 1 survives
+    assert idx.match(a) == [1]
+    assert {e2.block for e2 in [idx.pop_lru_leaf(), idx.pop_lru_leaf()]} \
+        == {1, 3}
+    assert idx.pop_lru_leaf() is None
+
+
+def test_index_pop_all():
+    idx = PrefixIndex(BS)
+    idx.register(_toks(7, 2 * BS), [4, 5])
+    assert sorted(idx.pop_all()) == [4, 5]
+    assert len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# Refcounted sharing on the allocator
+# ---------------------------------------------------------------------------
+
+
+def _conservation(cache):
+    """Every pool block is either free or referenced; slot-owned and
+    index-pinned references account for the full refcount mass."""
+    refs = sum(cache._ref[1:])
+    owned = sum(len(o) for o in cache._owned)
+    pinned = len(cache.prefix_index.blocks()) if cache.prefix_index else 0
+    assert refs == owned + pinned
+    live = {b for o in cache._owned for b in o}
+    if cache.prefix_index:
+        live |= set(cache.prefix_index.blocks())
+    assert len(live) + cache.free_blocks == cache.n_blocks - 1
+
+
+def test_adopt_shares_and_free_keeps_shared_blocks():
+    cache = _blank_cache()
+    toks = _toks(8, 2 * BS + 4)
+    cache.ensure(0, len(toks))
+    assert cache.prefix_register(0, toks) == 2
+    shared = cache.block_ids(0, 2 * BS).tolist()
+    cache.adopt(1, shared)
+    cache.ensure(1, len(toks))
+    assert cache.block_ids(1, 2 * BS).tolist() == shared
+    _conservation(cache)
+    free0 = cache.free_blocks
+    cache.free(0)
+    # slot 0's tail block frees; the shared prefix blocks stay live
+    assert cache.free_blocks == free0 + 1
+    assert cache.block_ids(1, 2 * BS).tolist() == shared
+    cache.free(1)
+    _conservation(cache)
+    # still pinned by the index, reclaimable on demand
+    assert cache.reclaimable_blocks == 2
+    cache.clear_prefix()
+    assert cache.free_blocks == cache.n_blocks - 1
+    _conservation(cache)
+
+
+def test_ensure_reclaims_index_blocks_instead_of_oom():
+    cache = PagedKVCache(_CONFIG, 2, MAX_LEN, None, block_size=BS,
+                         n_blocks=1 + MAX_LEN // BS)   # one slot's worth
+    cache.enable_prefix_cache()
+    toks = _toks(9, MAX_LEN)
+    cache.ensure(0, MAX_LEN)
+    cache.prefix_register(0, toks)
+    cache.free(0)
+    assert cache.free_blocks == 0 and cache.reclaimable_blocks == 4
+    assert cache.available_blocks == 4
+    # a new slot's growth evicts LRU index entries instead of raising
+    cache.ensure(1, MAX_LEN)
+    assert cache.owned(1) == 4
+    _conservation(cache)
+
+
+def test_make_writable_cow_on_shared_block():
+    cache = _blank_cache()
+    cache.ensure(0, 2 * BS)
+    blocks = cache.block_ids(0, 2 * BS).tolist()
+    cache.adopt(1, blocks)
+    src, dst = cache.make_writable(1, BS + 2)   # write into shared block 1
+    assert src == [blocks[1]] and len(dst) == 1 and dst[0] != blocks[1]
+    # slot 1 now owns a private copy; slot 0 untouched
+    assert cache.block_ids(1, 2 * BS).tolist() == [blocks[0], dst[0]]
+    assert cache.block_ids(0, 2 * BS).tolist() == blocks
+    # exclusive blocks need no copy
+    assert cache.make_writable(1, BS + 2) == ([], [])
+    _conservation(cache)
+
+
+def test_copy_blocks_moves_kv_content(setup):
+    c, params = setup
+    cache = PagedKVCache(c, N_SLOTS, MAX_LEN, params, block_size=BS)
+    tok = jnp.asarray(_toks(10, BS), jnp.int32)[None]
+    _, rows, _ = lm.prefill(c, params, tok)
+    from repro.serve.cache import insert_paged_rows
+    caches = insert_paged_rows(cache.caches, rows,
+                               jnp.asarray([[2]], jnp.int32),
+                               jnp.asarray([0], jnp.int32), block_size=BS)
+    caches = copy_blocks(caches, jnp.asarray([2], jnp.int32),
+                         jnp.asarray([5], jnp.int32))
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        if getattr(path[-1], "key", None) in ("k", "v"):
+            got = np.asarray(leaf, np.float32)
+            np.testing.assert_array_equal(got[:, 5], got[:, 2])
+            assert np.any(got[:, 5])          # real content moved
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_refcount_conservation_property(seed):
+    """Random adopt/ensure/free/register/reclaim sequences preserve the
+    pool-accounting invariants (no leaks, no double-frees)."""
+    rng = np.random.default_rng(seed)
+    cache = _blank_cache()
+    prompts = {}
+    for _ in range(30):
+        op = rng.choice(["ensure", "register", "adopt", "free", "clear"])
+        slot = int(rng.integers(0, N_SLOTS))
+        if op == "ensure" and cache.available_blocks >= 4:
+            if not cache._owned[slot]:
+                toks = _toks(int(rng.integers(0, 5)),
+                             int(rng.integers(1, MAX_LEN)))
+                pre = cache.prefix_match(toks)
+                cache.adopt(slot, pre)
+                cache.ensure(slot, len(toks))
+                prompts[slot] = toks
+        elif op == "register" and cache._owned[slot] and slot in prompts:
+            cache.prefix_register(slot, prompts[slot])
+        elif op == "adopt":
+            continue   # covered by ensure's match+adopt path
+        elif op == "free":
+            cache.free(slot)
+            prompts.pop(slot, None)
+        elif op == "clear":
+            cache.clear_prefix()
+        _conservation(cache)
+    for s in range(N_SLOTS):
+        cache.free(s)
+    cache.clear_prefix()
+    assert cache.free_blocks == cache.n_blocks - 1
+    _conservation(cache)
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence: prefix caching is invisible in the token streams
+# ---------------------------------------------------------------------------
+
+
+def _shared_trace(n=8, prefix_len=32, seed=11):
+    return generate_trace(TraceConfig(
+        tenants=(TenantSpec("a", weight=0.4, rate_hz=300.0,
+                            prompt_len=(3, 9), output_len=(3, 8),
+                            prefix_group="sys", prefix_len=prefix_len),
+                 TenantSpec("b", weight=0.4, rate_hz=300.0,
+                            prompt_len=(3, 9), output_len=(3, 8),
+                            prefix_group="sys", prefix_len=prefix_len),
+                 TenantSpec("misc", weight=0.2, rate_hz=150.0,
+                            prompt_len=(4, 10), output_len=(3, 6))),
+        n_requests=n, vocab=_CONFIG.vocab, seed=seed))
+
+
+@pytest.fixture(scope="module")
+def served(setup):
+    c, params = setup
+    reqs = _shared_trace()
+
+    def run(prefix):
+        eng = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                          cache="paged", block_size=BS,
+                          prefix_cache=prefix, decode_window=4)
+        out = eng.serve(reqs, policy="continuous")
+        return eng, out
+
+    return run(False), run(True)
+
+
+def test_prefix_engine_tokens_bit_identical(served):
+    (_, base), (_, pref) = served
+    assert {r.rid: r.tokens for r in base.results} \
+        == {r.rid: r.tokens for r in pref.results}
+
+
+def test_prefix_engine_actually_hit(served):
+    _, (eng, out) = served
+    assert eng.prefix_stats["hit_requests"] > 0
+    assert eng.prefix_stats["reused_blocks"] >= \
+        2 * eng.prefix_stats["hit_requests"]   # 32-token prefix = 2 blocks
+    assert eng.prefix_stats["registered_blocks"] >= 2
+    # tenants rode through into the results
+    assert {r.tenant for r in out.results} == {"a", "b", "misc"}
+
+
+def test_prefix_engine_pool_drains_clean(served):
+    _, (eng, _) = served
+    paged = eng._paged
+    assert all(len(o) == 0 for o in paged._owned)
+    assert paged.free_blocks + paged.reclaimable_blocks \
+        == paged.n_blocks - 1
+    eng.reset_prefix_cache()
+    assert paged.free_blocks == paged.n_blocks - 1
+    assert eng.prefix_stats["hit_requests"] == 0
+
+
+def test_prefix_requires_paged():
+    with pytest.raises(AssertionError):
+        ServeEngine(_CONFIG, None, cache="slotted", prefix_cache=True)

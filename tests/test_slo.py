@@ -1,0 +1,130 @@
+"""SLO scoring: goodput edge cases, quantiles, Wh-per-SLO-met-request.
+
+Pure host-side tests over ``serve.slo`` + ``core.metrics.percentile``
+using hand-built ``RequestResult`` records with exactly known latencies.
+"""
+import math
+
+import pytest
+
+from repro.core.metrics import percentile
+from repro.serve.requests import RequestResult
+from repro.serve.slo import SLO, evaluate_slo
+
+
+def _result(rid=0, ttft=0.1, tpot=0.01, n_tokens=5, tenant="",
+            energy_wh=0.0):
+    """A result with exact ttft_s/tpot_s: arrival 0, first token at
+    ``ttft``, finish placed so the decode phase averages ``tpot``."""
+    return RequestResult(
+        rid=rid, prompt_len=4, tokens=list(range(n_tokens)),
+        arrival_s=0.0, admitted_s=0.0, first_token_s=ttft,
+        finish_s=ttft + tpot * max(n_tokens - 1, 0),
+        tenant=tenant, energy_wh=energy_wh)
+
+
+# -- percentile (nearest-rank) ---------------------------------------------
+
+
+def test_percentile_edges():
+    assert percentile([], 99.0) == 0.0
+    assert percentile([3.0], 50.0) == 3.0
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 0.0) == 1.0
+    assert percentile(xs, 50.0) == 3.0
+    assert percentile(xs, 100.0) == 5.0      # clamped to the max
+    assert percentile(xs, 99.0) == 5.0
+
+
+def test_tpot_edge_single_token():
+    r = _result(n_tokens=1, ttft=0.5)
+    assert r.tpot_s == 0.0                   # no decode phase to time
+
+
+# -- goodput ----------------------------------------------------------------
+
+
+def test_goodput_all_meet():
+    rs = [_result(rid=i, ttft=0.1, tpot=0.01) for i in range(4)]
+    rep = evaluate_slo(rs, SLO(ttft_s=1.0, tpot_s=0.1))
+    assert rep.goodput == 1.0 and rep.n_met == 4
+
+
+def test_goodput_zero_met_and_empty():
+    rs = [_result(rid=i, ttft=5.0) for i in range(3)]
+    rep = evaluate_slo(rs, SLO(ttft_s=1.0, tpot_s=0.1))
+    assert rep.goodput == 0.0 and rep.n_met == 0
+    empty = evaluate_slo([], SLO(ttft_s=1.0, tpot_s=0.1))
+    assert empty.goodput == 0.0 and empty.n_requests == 0
+    assert empty.wh_per_slo_request == 0.0   # no energy, no work: 0 not inf
+
+
+def test_goodput_boundary_equality_counts_as_met():
+    slo = SLO(ttft_s=0.5, tpot_s=0.02)
+    on_budget = _result(ttft=0.5, tpot=0.02)
+    assert slo.met_by(on_budget)
+    rep = evaluate_slo([on_budget], slo)
+    assert rep.goodput == 1.0
+
+
+def test_goodput_requires_both_targets():
+    slo = SLO(ttft_s=1.0, tpot_s=0.01)
+    slow_decode = _result(ttft=0.1, tpot=0.5)     # TTFT fine, TPOT blown
+    slow_first = _result(ttft=5.0, tpot=0.005)    # TPOT fine, TTFT blown
+    rep = evaluate_slo([slow_decode, slow_first], slo)
+    assert rep.n_met == 0
+
+
+# -- energy per SLO-met request --------------------------------------------
+
+
+def test_wh_per_slo_request():
+    rs = [_result(rid=0, ttft=0.1, energy_wh=0.3),
+          _result(rid=1, ttft=9.0, energy_wh=0.5)]   # misses
+    rep = evaluate_slo(rs, SLO(ttft_s=1.0, tpot_s=1.0))
+    # ALL attributed energy divides over only the met requests
+    assert rep.energy_wh == pytest.approx(0.8)
+    assert rep.wh_per_slo_request == pytest.approx(0.8)
+    assert rep.goodput == 0.5
+
+
+def test_wh_per_slo_request_inf_when_nothing_met():
+    rs = [_result(ttft=9.0, energy_wh=0.2)]
+    rep = evaluate_slo(rs, SLO(ttft_s=1.0, tpot_s=1.0))
+    assert math.isinf(rep.wh_per_slo_request)
+
+
+def test_total_energy_override():
+    rs = [_result(ttft=0.1, energy_wh=0.3)]
+    rep = evaluate_slo(rs, SLO(ttft_s=1.0, tpot_s=1.0),
+                       total_energy_wh=1.2)
+    assert rep.wh_per_slo_request == pytest.approx(1.2)
+
+
+# -- per-tenant targets -----------------------------------------------------
+
+
+def test_per_tenant_targets_and_default():
+    rs = [_result(rid=0, ttft=0.3, tenant="chat", energy_wh=0.1),
+          _result(rid=1, ttft=0.3, tenant="batch", energy_wh=0.2),
+          _result(rid=2, ttft=0.3, tenant="unmapped", energy_wh=0.4)]
+    rep = evaluate_slo(rs, {"chat": SLO(0.5, 1.0), "batch": SLO(0.1, 1.0)},
+                       default=SLO(1.0, 1.0))
+    # chat meets, batch misses its tighter target, unmapped uses default
+    assert rep.n_met == 2
+    assert set(rep.per_tenant) == {"chat", "batch", "unmapped"}
+    assert rep.per_tenant["chat"].goodput == 1.0
+    assert rep.per_tenant["batch"].goodput == 0.0
+    assert rep.per_tenant["unmapped"].energy_wh == pytest.approx(0.4)
+
+
+def test_missing_tenant_without_default_raises():
+    with pytest.raises(AssertionError):
+        evaluate_slo([_result(tenant="ghost")], {"chat": SLO(1.0, 1.0)})
+
+
+def test_quantiles_in_report():
+    rs = [_result(rid=i, ttft=float(i + 1) / 10) for i in range(10)]
+    rep = evaluate_slo(rs, SLO(ttft_s=10.0, tpot_s=10.0))
+    assert rep.ttft_p50_s == pytest.approx(0.6)
+    assert rep.ttft_p99_s == pytest.approx(1.0)

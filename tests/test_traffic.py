@@ -1,0 +1,161 @@
+"""Multi-tenant trace generator: determinism, mixes, envelopes, prefixes.
+
+Pure host-side tests (no jax device work) over ``serve.traffic``: the
+same seeded config must reproduce the same trace bit-for-bit, tenant
+allocations follow largest-remainder weights exactly, diurnal thinning
+stays inside its envelope, and shared-prefix populations share exactly
+their group's system-prompt tokens.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.requests import exponential_arrivals, poisson_requests
+from repro.serve.traffic import (
+    TRACE_NAMES, TenantSpec, TraceConfig, _tenant_counts, diurnal_envelope,
+    generate_trace, preset_trace,
+)
+
+
+def _trace(name="poisson", n=40, seed=0, **kw):
+    return generate_trace(preset_trace(name, n_requests=n, vocab=512,
+                                       seed=seed, **kw))
+
+
+def _key(reqs):
+    return [(r.rid, r.tenant, tuple(r.prompt), r.max_new_tokens,
+             r.arrival_s) for r in reqs]
+
+
+# -- determinism ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", TRACE_NAMES)
+def test_trace_deterministic_per_seed(name):
+    assert _key(_trace(name, seed=7)) == _key(_trace(name, seed=7))
+
+
+def test_trace_differs_across_seeds():
+    assert _key(_trace(seed=0)) != _key(_trace(seed=1))
+
+
+def test_config_hash_stable_and_sensitive():
+    cfg = preset_trace("poisson", n_requests=40, vocab=512, seed=0)
+    assert cfg.config_hash() == cfg.config_hash()
+    assert len(cfg.config_hash()) == 12
+    bumped = preset_trace("poisson", n_requests=40, vocab=512, seed=1)
+    assert cfg.config_hash() != bumped.config_hash()
+    other = preset_trace("bursty", n_requests=40, vocab=512, seed=0)
+    assert cfg.config_hash() != other.config_hash()
+
+
+# -- arrival structure ------------------------------------------------------
+
+
+def test_arrivals_sorted_rids_in_order_first_at_zero():
+    reqs = _trace(n=60, seed=3)
+    assert reqs[0].arrival_s == 0.0
+    arr = [r.arrival_s for r in reqs]
+    assert arr == sorted(arr)
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+
+
+def test_tenant_counts_largest_remainder():
+    tenants = (TenantSpec("a", weight=0.5), TenantSpec("b", weight=0.3),
+               TenantSpec("c", weight=0.2))
+    assert _tenant_counts(tenants, 10) == [5, 3, 2]
+    # remainders decide who rounds up; the total always lands exactly
+    assert sum(_tenant_counts(tenants, 7)) == 7
+    reqs = _trace("poisson", n=40)
+    by = {t: sum(r.tenant == t for r in reqs)
+          for t in {r.tenant for r in reqs}}
+    assert by == {"chat": 20, "search": 12, "code": 8}
+
+
+def test_diurnal_envelope_bounds():
+    t = np.linspace(0.0, 10.0, 500)
+    env = diurnal_envelope(t, period_s=4.0, depth=0.6)
+    assert np.all(env <= 1.0 + 1e-12) and np.all(env >= 0.4 - 1e-12)
+    assert env[0] == pytest.approx(1.0)      # peak at t=0
+    # disabled envelope is identically 1
+    assert np.all(diurnal_envelope(t, 0.0, 0.5) == 1.0)
+    assert np.all(diurnal_envelope(t, 4.0, 0.0) == 1.0)
+
+
+def test_diurnal_trace_keeps_allocation_and_determinism():
+    kw = dict(diurnal_period_s=0.5, diurnal_depth=0.7)
+    reqs = _trace("poisson", n=48, seed=2, **kw)
+    assert len(reqs) == 48
+    assert _key(reqs) == _key(_trace("poisson", n=48, seed=2, **kw))
+
+
+# -- shared prefixes --------------------------------------------------------
+
+
+def test_shared_prefix_population():
+    reqs = _trace("shared_prefix", n=30, seed=4)
+    shared = [r for r in reqs if r.tenant in ("assist-a", "assist-b")]
+    assert len(shared) >= 2
+    heads = {tuple(r.prompt[:48]) for r in shared}
+    assert len(heads) == 1                   # one system prompt per group
+    bodies = {tuple(r.prompt[48:]) for r in shared}
+    assert len(bodies) > 1                   # suffixes genuinely vary
+    misc = [r for r in reqs if r.tenant == "misc"]
+    assert all(tuple(r.prompt[:48]) not in heads for r in misc
+               if len(r.prompt) >= 48)
+
+
+def test_prefix_group_stable_across_tenant_split():
+    # two tenants in the same group get the same tokens; a different
+    # group (or seed) gets different ones
+    mk = lambda grp, seed: generate_trace(TraceConfig(
+        tenants=(TenantSpec("x", prefix_group=grp, prefix_len=16),),
+        n_requests=3, vocab=512, seed=seed))
+    a0 = tuple(mk("sys", 0)[0].prompt[:16])
+    assert a0 == tuple(mk("sys", 0)[0].prompt[:16])
+    assert a0 != tuple(mk("other", 0)[0].prompt[:16])
+    assert a0 != tuple(mk("sys", 1)[0].prompt[:16])
+
+
+def test_prompts_fit_slot_capacity():
+    # every preset's worst case must fit the serve_slo MAX_LEN=96 slots
+    for name in TRACE_NAMES:
+        for r in _trace(name, n=40, seed=0):
+            assert r.prompt_len + r.max_new_tokens <= 96, (name, r.rid)
+            assert all(0 < t < 512 for t in r.prompt)
+
+
+# -- poisson_requests seeding (satellite: shared arrival primitive) ---------
+
+
+def test_exponential_arrivals_matches_inline_stream():
+    rng = np.random.default_rng(11)
+    got = exponential_arrivals(rng, 32, 100.0)
+    rng2 = np.random.default_rng(11)
+    gaps = rng2.exponential(1.0 / 100.0, size=32)
+    np.testing.assert_array_equal(got, np.cumsum(gaps) - gaps[0])
+    assert got[0] == 0.0
+
+
+def test_poisson_requests_deterministic():
+    a = poisson_requests(16, 200.0, 512, seed=5)
+    b = poisson_requests(16, 200.0, 512, seed=5)
+    assert [(r.arrival_s, r.max_new_tokens, tuple(np.asarray(r.prompt)))
+            for r in a] == \
+           [(r.arrival_s, r.max_new_tokens, tuple(np.asarray(r.prompt)))
+            for r in b]
+    c = poisson_requests(16, 200.0, 512, seed=6)
+    assert [r.arrival_s for r in a] != [r.arrival_s for r in c]
+
+
+# -- validation -------------------------------------------------------------
+
+
+def test_tenant_spec_validation():
+    with pytest.raises(AssertionError):
+        TenantSpec("bad", arrival="fractal")
+    with pytest.raises(AssertionError):
+        TenantSpec("bad", weight=0.0)
+    with pytest.raises(AssertionError):
+        TenantSpec("bad", prefix_len=16)      # group without name
+    with pytest.raises(AssertionError):
+        TenantSpec("bad", prefix_group="sys")  # name without length
