@@ -1,0 +1,91 @@
+"""TTFT-cliff gate: chunked scheduling must beat phased where it matters.
+
+Drives the serve_slo long_prefill cell directly (same trace, same tight
+pool, float32 so greedy argmax never flakes) under both schedulers and
+asserts the ISSUE-8 acceptance criteria:
+
+  * chunked ttft_p99 <= 0.7x phased (median of RUNS repeats per sched —
+    single-run tail quantiles on a shared CI host are too noisy to gate);
+  * chunked goodput >= phased goodput;
+  * every run of either scheduler produced the SAME token streams
+    (preemption + replay included — the bit-identity contract);
+  * the chunked runs actually exercised preemption (the cell is tuned
+    so phased can only defer: zero preemptions means the tight-pool
+    regime silently went slack and the gate is measuring nothing).
+
+Run from the repo root:  PYTHONPATH=src python scripts/check_ttft_gate.py
+"""
+import statistics
+import sys
+
+import jax
+
+from repro.bench.workloads.serve_slo import (
+    BLOCK_SIZE, MAX_LEN, N_REQUESTS_SMOKE, N_SLOTS, POOL_BY_TRACE, SEED,
+    SLO_BY_TENANT, SLO_TIGHT, _stream_hash,
+)
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+from repro.serve.slo import evaluate_slo
+from repro.serve.traffic import generate_trace, preset_trace
+
+RUNS = 3
+TTFT_RATIO_MAX = 0.7
+
+
+def main() -> int:
+    c = get_config("llama3.2-3b").reduced(dtype="float32",
+                                          param_dtype="float32")
+    params = lm.init(jax.random.key(SEED), c)
+    engine = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                         cache="paged", block_size=BLOCK_SIZE,
+                         n_blocks=POOL_BY_TRACE["long_prefill"])
+    cfg = preset_trace("long_prefill", n_requests=N_REQUESTS_SMOKE,
+                       vocab=c.vocab, seed=SEED)
+    requests = generate_trace(cfg)
+
+    stats = {}
+    hashes = set()
+    for sched in ("phased", "chunked"):
+        engine.warmup(requests=requests, sched=sched)
+        p99s, goodputs, preemptions = [], [], 0
+        for _ in range(RUNS):
+            out = engine.serve(requests, policy="continuous", sched=sched)
+            rep = evaluate_slo(out.results, SLO_BY_TENANT,
+                               default=SLO_TIGHT)
+            if rep.n_requests != len(requests):
+                return f"{sched}: served {rep.n_requests}/{len(requests)}"
+            p99s.append(rep.ttft_p99_s)
+            goodputs.append(rep.goodput)
+            preemptions += engine.preemptions
+            hashes.add(_stream_hash(out.results))
+        stats[sched] = {"ttft_p99": statistics.median(p99s),
+                        "goodput": min(goodputs),
+                        "preemptions": preemptions}
+
+    ph, ch = stats["phased"], stats["chunked"]
+    ratio = ch["ttft_p99"] / max(ph["ttft_p99"], 1e-12)
+    print(f"ttft gate: phased p99={ph['ttft_p99'] * 1e3:.1f}ms "
+          f"chunked p99={ch['ttft_p99'] * 1e3:.1f}ms ratio={ratio:.3f} "
+          f"(max {TTFT_RATIO_MAX}) goodput={ph['goodput']:.3f}->"
+          f"{ch['goodput']:.3f} preemptions={ch['preemptions']}")
+    if len(hashes) != 1:
+        return f"token streams diverged across runs/schedulers: {hashes}"
+    if ph["preemptions"] != 0:
+        return "phased run preempted — phased must only defer"
+    if ch["preemptions"] == 0:
+        return ("chunked never preempted: the long_prefill pool is no "
+                "longer tight enough to measure the cliff")
+    if ratio > TTFT_RATIO_MAX:
+        return (f"chunked/phased ttft_p99 ratio {ratio:.3f} > "
+                f"{TTFT_RATIO_MAX}: the chunked scheduler stopped "
+                f"collapsing the admission-stall cliff")
+    if ch["goodput"] < ph["goodput"]:
+        return (f"chunked goodput {ch['goodput']:.3f} < phased "
+                f"{ph['goodput']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -224,12 +224,28 @@ def diff_metric(metric: str, base_v: float, cur_v: float,
     -100% and would slip under any tol >= 1.
     """
     higher = metric_direction(metric)
-    if not (math.isfinite(base_v) and math.isfinite(cur_v)):
-        # NaN/inf is a measurement failure, not a delta — it must gate,
+    if math.isnan(base_v) or math.isnan(cur_v):
+        # NaN is a measurement failure, not a delta — it must gate,
         # never slip through as "unchanged" (NaN fails every comparison)
         return MetricDelta(metric=metric, base=base_v, current=cur_v,
                            rel_delta=math.nan, tolerance=tolerance,
                            status=REGRESSED)
+    if math.isinf(base_v) or math.isinf(cur_v):
+        # inf can be an honest value, not a failure: wh_per_slo_request
+        # is inf whenever energy was spent but nothing met the SLO. A
+        # stress cell that is inf on BOTH sides (same sign) is therefore
+        # unchanged — gating it would flag the baseline's own saturation
+        # forever. Any finite<->inf transition still gates as a
+        # regression: degenerating to inf is the metric collapsing, and
+        # escaping it (a genuine recovery) changes regime enough that a
+        # human must look and re-promote rather than let it slide by.
+        if base_v == cur_v:
+            return MetricDelta(metric=metric, base=base_v, current=cur_v,
+                               rel_delta=0.0, tolerance=tolerance,
+                               status=UNCHANGED)
+        return MetricDelta(metric=metric, base=base_v, current=cur_v,
+                           rel_delta=math.copysign(math.inf, cur_v - base_v),
+                           tolerance=tolerance, status=REGRESSED)
     if not higher and cur_v == 0.0 and base_v > 0.0:
         # a time/energy metric degenerating to exactly zero is a broken
         # measurement path (e.g. a dead power scope), not a best-ever run

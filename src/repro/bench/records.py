@@ -92,6 +92,17 @@ COMPARED_METRICS: dict[str, tuple[bool, float]] = {
     "ttft_p99": (False, 0.35),
     "tpot_p99": (False, 0.35),
     "wh_per_slo_request": (False, 0.30),
+    # chunked-vs-phased scheduler ratios (sched axis): same-cell pairs,
+    # so trace noise largely cancels — except ttft_p99_vs_phased, a
+    # ratio of two SINGLE-RUN p99s whose run-to-run wobble is multiples,
+    # not percent. Its wide tolerance lives on the serve_slo workload
+    # (compare_tols stamp — a registry base here would be outranked by
+    # the CI's blanket --rel-tol); the real cliff gate is
+    # scripts/check_ttft_gate.py (median-of-3 per sched). The base
+    # below only matters for compares run without a CLI default.
+    "speedup_vs_phased": (True, 0.25),
+    "ttft_p99_vs_phased": (False, 1.5),
+    "goodput_vs_phased": (True, 0.15),
 }
 
 

@@ -24,12 +24,35 @@ record column. Token streams are bit-identical to the non-cached path
 (asserted in tests/test_prefix_cache.py), so the comparison is pure
 performance, never quality.
 
+The ``sched`` axis isolates iteration-level scheduling on the same
+engine: ``phased`` prefills an admitted prompt whole and reserves every
+request's worst-case block footprint at admission; ``chunked``
+interleaves block-aligned ``chunk_tokens`` slices with decode steps,
+admits optimistically, and backs both admission and decode growth with
+block-granular preemption (``ServeEngine`` module docstring). The
+``long_prefill`` trace runs against a deliberately TIGHT pool
+(``POOL_BY_TRACE``): long-generation requests make phased hold
+6-block reservations for whole request lifetimes, so documents (and
+everything FIFO-queued behind them) defer for tens of milliseconds,
+while chunked evicts the youngest generation and admits immediately —
+the ttft_p99 collapse the ``*_vs_phased`` ratios gate per
+(trace x cache) cell. ``stream_hash`` (order-independent digest of
+every per-request token stream) rides along so any sched- or
+cache-induced token divergence is visible in the row — preemption
+included: a resumed request replays its emitted tail through the
+decode program, keeping streams bit-identical (the property
+tests/test_chunked_serve.py pins). ``preemptions`` counts chunked
+eviction events (nonzero only on the oversubscribed long_prefill
+cells).
+
 SLO targets are deliberately generous for the reduced-config CPU cell
 (~10x steady-state latency): goodput sits at 1.0 and acts as a canary —
 only a scheduler stall or admission bug pushes it down — while the
 discriminating signal lives in the tail-latency and energy columns.
 """
 from __future__ import annotations
+
+import hashlib
 
 import jax
 
@@ -57,22 +80,43 @@ SEED = 0
 #: shared_prefix "misc") tolerate double.
 SLO_TIGHT = SLO(ttft_s=2.0, tpot_s=0.2)
 SLO_RELAXED = SLO(ttft_s=4.0, tpot_s=0.4)
-SLO_BY_TENANT = {"batch": SLO_RELAXED, "misc": SLO_RELAXED}
+#: batch-flavored tenants tolerate double; long_prefill's "doc" tenant
+#: is offline-flavored AND pays an unavoidable 5-chunk prefill
+SLO_BY_TENANT = {"batch": SLO_RELAXED, "misc": SLO_RELAXED,
+                 "doc": SLO_RELAXED}
+
+#: per-trace paged-pool override (blocks). long_prefill runs against a
+#: TIGHT pool: 17 blocks = trash + 16 usable, so two live worst-case
+#: generations (6 blocks each) plus a document prompt (6) oversubscribe
+#: it — the regime where phased defers admissions behind gen lifetimes
+#: and chunked preempts its way through (see the traffic preset
+#: comment). Other traces keep the engine's ample default pool.
+POOL_BY_TRACE = {"long_prefill": 17}
 
 
-def _engine(ctx, arch: str, cache: str) -> ServeEngine:
+def _stream_hash(results) -> str:
+    """Order-independent sha1 over {rid: tokens}: completion order (and
+    therefore results-list order) differs across scheduler modes, so the
+    digest sorts by rid before hashing."""
+    blob = repr(sorted((r.rid, tuple(r.tokens)) for r in results))
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def _engine(ctx, arch: str, cache: str,
+            n_blocks=None) -> ServeEngine:
     def make():
         c = get_config(arch).reduced()
         params = lm.init(jax.random.key(SEED), c)
         impl, interpret = _paged_impl()
         engine = ServeEngine(c, params, n_slots=N_SLOTS, max_len=MAX_LEN,
                              cache="paged", block_size=BLOCK_SIZE,
+                             n_blocks=n_blocks,
                              prefix_cache=cache == "paged+prefix",
                              paged_impl=impl, paged_interpret=interpret,
                              power_methods=ctx.power_methods)
         return c, engine
 
-    return ctx.memo(("serve_slo", arch, cache), make)
+    return ctx.memo(("serve_slo", arch, cache, n_blocks), make)
 
 
 @workload(
@@ -80,18 +124,36 @@ def _engine(ctx, arch: str, cache: str) -> ServeEngine:
     analog="multi-tenant SLO serving: goodput + Wh/SLO-met-request "
            "(MLPerf-Power style), prefix-cached prefill",
     space=Space({"arch": ["llama3.2-3b"], "trace": list(TRACE_NAMES),
-                 "cache": ["paged", "paged+prefix"]}),
-    smoke={"trace": ["poisson", "shared_prefix"]},
+                 "cache": ["paged", "paged+prefix"],
+                 # last axis -> phased expands before chunked for every
+                 # cell, so the vs_phased ratio's twin is always cached
+                 "sched": ["phased", "chunked"]}),
+    smoke={"trace": ["poisson", "shared_prefix", "long_prefill"]},
     tags=("serve", "smoke", "full"),
-    result_columns=["arch", "trace", "cache", "goodput", "ttft_p99",
-                    "tpot_p99", "wh_per_slo_request", "decode_tok_s",
-                    "prefix_hit_requests", "ttft_p99_vs_paged",
-                    "wh_per_slo_vs_paged", "trace_hash", "power_source"],
+    result_columns=["arch", "trace", "cache", "sched", "goodput",
+                    "ttft_p99", "tpot_p99", "wh_per_slo_request",
+                    "decode_tok_s", "prefix_hit_requests", "preemptions",
+                    "ttft_p99_vs_paged", "wh_per_slo_vs_paged",
+                    "ttft_p99_vs_phased", "goodput_vs_phased",
+                    "speedup_vs_phased", "trace_hash", "power_source"],
     primary_metric="goodput",
+    # Tail quantiles from a SINGLE smoke run are scheduling-event-sized
+    # (one GC pause or admission stall lands straight in p99): two
+    # back-to-back clean runs differ 1.5-4x on ttft_p99/tpot_p99 while
+    # throughput and energy hold within percent. They can't carry the
+    # CI's blanket --rel-tol (which outranks the registry base — see
+    # compare.effective_tolerance), so these stamps keep the columns
+    # gated only against order-of-magnitude cliffs; the statistically
+    # sound tail gate is scripts/check_ttft_gate.py (median-of-3 per
+    # sched on the same host minutes apart). Throughput/energy columns
+    # stay on the tight default.
+    compare_tols={"ttft_p99": 4.0, "tpot_p99": 1.5,
+                  "ttft_p99_vs_phased": 6.0},
 )
 def build(pt, ctx):
     """Multi-tenant traces x prefix caching, scored against SLOs."""
-    c, engine = _engine(ctx, pt["arch"], pt["cache"])
+    c, engine = _engine(ctx, pt["arch"], pt["cache"],
+                        n_blocks=POOL_BY_TRACE.get(pt["trace"]))
     n = N_REQUESTS_SMOKE if ctx.smoke else N_REQUESTS
     cfg = preset_trace(pt["trace"], n_requests=n, vocab=c.vocab, seed=SEED)
     requests = generate_trace(cfg)
@@ -103,10 +165,11 @@ def build(pt, ctx):
     # (bucket, depth) program on the second. The index is cleared
     # afterwards, so measured runs start cold either way.
     warmed = ctx.cache.setdefault("slo_warmed", set())
-    wkey = (pt["arch"], pt["cache"], pt["trace"])
+    wkey = (pt["arch"], pt["cache"], pt["trace"], pt["sched"])
     if wkey not in warmed:
         engine.warmup(requests=requests,
-                      repeat=2 if engine.prefix_cache else 1)
+                      repeat=2 if engine.prefix_cache else 1,
+                      sched=pt["sched"])
         warmed.add(wkey)
 
     def run_cell():
@@ -117,7 +180,8 @@ def build(pt, ctx):
         # (and the promoted baseline) see identical hit sequences.
         def one_run():
             engine.reset_prefix_cache()
-            return engine.serve(requests, policy="continuous")
+            return engine.serve(requests, policy="continuous",
+                                sched=pt["sched"])
 
         first = None if drill else one_run().summary
         out = one_run()
@@ -150,25 +214,43 @@ def build(pt, ctx):
             # full provenance: the trace is reproducible from its row
             "trace_seed": SEED,
             "trace_hash": cfg.config_hash(),
+            # order-independent digest of every request's token stream:
+            # equal across the sched and cache axes (same greedy argmax
+            # path), so a quality-affecting scheduler bug shows up as a
+            # hash mismatch in the results table even though the compare
+            # gate (floats only) can't diff it
+            "stream_hash": _stream_hash(out.results),
+            "preemptions": engine.preemptions,
         }
         for name, sub in report.per_tenant.items():
             metrics[f"goodput_{name}"] = sub.goodput
         if engine.prefix_cache:
             for key, val in engine.prefix_stats.items():
                 metrics[f"prefix_{key}"] = val
-        # headline ratios against the plain-paged twin cell (the Space
-        # expands cache=paged first, so it is already measured)
+        # headline ratios against the twin cells: plain-paged (same
+        # sched) and phased (same cache) — both expand earlier in the
+        # Space, so they are already measured except under --points
         cells = ctx.cache.setdefault("serve_slo_cells", {})
         cell_key = (pt["arch"], pt["trace"])
-        cells.setdefault(cell_key, {})[pt["cache"]] = metrics
+        cells.setdefault(cell_key, {})[(pt["cache"], pt["sched"])] = metrics
         if pt["cache"] == "paged+prefix":
-            base = cells[cell_key].get("paged")
+            base = cells[cell_key].get(("paged", pt["sched"]))
             if base is not None:   # absent only under --points filters
                 metrics["ttft_p99_vs_paged"] = (
                     metrics["ttft_p99"] / max(base["ttft_p99"], 1e-9))
                 metrics["wh_per_slo_vs_paged"] = (
                     metrics["wh_per_slo_request"]
                     / max(base["wh_per_slo_request"], 1e-12))
+        if pt["sched"] == "chunked":
+            base = cells[cell_key].get((pt["cache"], "phased"))
+            if base is not None:   # absent only under --points filters
+                metrics["ttft_p99_vs_phased"] = (
+                    metrics["ttft_p99"] / max(base["ttft_p99"], 1e-9))
+                metrics["goodput_vs_phased"] = (
+                    metrics["goodput"] / max(base["goodput"], 1e-9))
+                metrics["speedup_vs_phased"] = (
+                    metrics["decode_tok_s"]
+                    / max(base["decode_tok_s"], 1e-9))
         return metrics
 
     return {"serve_slo": run_cell}

@@ -14,6 +14,7 @@ that window, yielding Wh/token and Wh/request per served request.
 from __future__ import annotations
 
 import bisect
+import math
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -59,11 +60,22 @@ def mfu(model_flops_per_step: float, iter_time_s: float, n_chips: int,
 def percentile(xs: Sequence[float], q: float) -> float:
     """Nearest-rank percentile (``q`` in [0, 100]); 0.0 for an empty
     sequence. The single quantile rule shared by the serve summary and
-    the SLO layer, so p95/p99 figures agree across reports."""
+    the SLO layer, so p95/p99 figures agree across reports.
+
+    Nearest-rank: the q-th percentile of n samples is the value at rank
+    ``ceil(q/100 * n)`` (1-indexed), i.e. the smallest sample with at
+    least q percent of the data at or below it — p50 of [1,2,3,4] is 2,
+    p100 is the max, p0 clamps to the min. The rank is snapped to the
+    nearest integer before the ceil so exact-multiple ranks (q=25 of
+    n=4 -> rank 1.0000000000000002 in floats) don't round up a bucket.
+    """
     xs = sorted(xs)
     if not xs:
         return 0.0
-    i = min(int(q / 100.0 * len(xs)), len(xs) - 1)
+    r = q / 100.0 * len(xs)
+    if abs(r - round(r)) < 1e-9:
+        r = round(r)
+    i = min(max(math.ceil(r) - 1, 0), len(xs) - 1)
     return xs[i]
 
 

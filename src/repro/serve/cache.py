@@ -442,20 +442,30 @@ class PagedKVCache:
             owned.append(blk)
             self._dirty = True
 
-    def free(self, slot: int) -> None:
+    def free(self, slot: int) -> int:
         """Drop the slot's references; blocks whose refcount hits zero
         return to the free list (a block still shared by another slot or
         pinned by the prefix index stays live). The table row reverts to
-        the trash block so in-flight rides write harmlessly."""
+        the trash block so in-flight rides write harmlessly.
+
+        Returns the number of blocks that actually reached the free
+        list — the preemption reclaim hook: evicting a victim whose
+        blocks are mostly shared/index-pinned may free less than it
+        owned, and the engine keeps preempting until the demand is
+        covered.
+        """
+        freed = 0
         if self._owned[slot]:
             for blk in reversed(self._owned[slot]):
                 self._ref[blk] -= 1
                 assert self._ref[blk] >= 0, (slot, blk)
                 if self._ref[blk] == 0:
                     self._free.append(blk)
+                    freed += 1
             self._owned[slot] = []
             self.tables_np[slot] = 0
             self._dirty = True
+        return freed
 
     def adopt(self, slot: int, block_ids) -> None:
         """Attach existing (prefix) blocks to ``slot`` — shared, read-

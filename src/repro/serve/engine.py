@@ -35,6 +35,31 @@ The decode hot path (model mode) is built around three mechanisms:
     in one batched ``np.asarray`` fetch afterwards — scheduler
     bookkeeping overlaps device compute instead of blocking every token.
 
+Two scheduler modes share the loop (``sched=``):
+
+  * ``phased``  — a newly admitted request's WHOLE prompt prefills at
+    admission; long prompts stall every decoding slot for the full
+    prefill (the TTFT/TPOT cliff the chunked mode removes);
+  * ``chunked`` — iteration-level scheduling proper: each loop
+    iteration runs at most one ``chunk_tokens`` prefill slice per
+    mid-prefill slot (batched across slots), then one decode step for
+    every fully-prefilled slot. Chunk boundaries are block-aligned, so
+    every chunk after the first reuses the suffix-prefill program
+    (``prefix_kv`` gathered from the slot's own blocks). Admission
+    reserves only prompt+1 blocks (optimistic); decode-time growth that
+    hits ``CacheOOM`` preempts the youngest other request — its blocks
+    free, it re-queues at the front, and it resumes later by
+    recompute-from-prompt (``Scheduler.preempt``): the original prompt
+    prefills again chunk by chunk, then the already-emitted tail
+    REPLAYS through the decode program as forced inputs
+    (``Request.n_replay`` / ``Slot.replay``) — decode built that KV the
+    first time, and prefill's attention numerics are not bit-equal to
+    decode's, so replay is what keeps a resumed stream bit-identical.
+    Requires the paged cache and an attention-only family. Greedy
+    argmax streams are bit-identical to phased: chunked prefill
+    computes the same causal attention in block-aligned slices, and
+    every KV row is built by the same program phased used for it.
+
 Energy: the engine reads its ``PowerMethod`` list synchronously at every
 step-window boundary, so each prefill/decode window is bracketed by
 samples and ``repro.core.metrics.attribute_energy`` integrates exactly
@@ -63,8 +88,8 @@ from repro.core.metrics import (
 from repro.core.runner import StragglerWatchdog
 from repro.models import lm
 from repro.serve.cache import (
-    PagedKVCache, _is_kv, copy_blocks, grow_caches, insert_paged_rows,
-    insert_rows, slotted_cache,
+    CacheOOM, PagedKVCache, _is_kv, copy_blocks, grow_caches,
+    insert_paged_rows, insert_rows, slotted_cache,
 )
 from repro.serve.requests import Request, RequestResult
 from repro.serve.scheduler import Scheduler, Slot, StepRecord
@@ -149,6 +174,7 @@ class ServeEngine:
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
                  decode_window: int = 8,
+                 sched: str = "phased", chunk_tokens: int = 32,
                  paged_impl: str = "xla", paged_interpret: bool = False,
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
@@ -157,6 +183,7 @@ class ServeEngine:
                  power_methods: Sequence = (),
                  watchdog: Optional[StragglerWatchdog] = None):
         assert cache in ("slotted", "paged"), cache
+        assert sched in ("phased", "chunked"), sched
         assert not prefix_cache or cache == "paged", (
             "prefix caching shares KV blocks — requires the paged cache")
         self.c, self.params = c, params
@@ -166,6 +193,12 @@ class ServeEngine:
         self._n_blocks = n_blocks
         self.prefix_cache = prefix_cache
         self.decode_window = max(int(decode_window), 1)
+        #: default scheduler mode for serve(): "phased" keeps the
+        #: admission-wave prefill; "chunked" interleaves chunk_tokens
+        #: prefill slices with decode steps (iteration-level scheduling)
+        self.sched = sched
+        self.chunk_tokens = int(chunk_tokens)
+        self.preemptions = 0          # preempt events in the last serve()
         self.paged_impl, self.paged_interpret = paged_impl, paged_interpret
         self.impl_prefill = impl_prefill
         self.impl_decode, self.donate = impl_decode, donate
@@ -354,8 +387,10 @@ class ServeEngine:
                        for s, cap in self._slot_cap.items())
         return self._paged.available_blocks - reserved
 
-    def _admit_paged(self, sched: Scheduler, admitted: list) -> list:
-        """Defer admissions an oversubscribed pool cannot reserve.
+    def _admit_paged(self, sched: Scheduler, admitted: list,
+                     results=None, chunked: bool = False) -> list:
+        """Reserve pool blocks for new admissions; defer (phased) or
+        preempt (chunked) when the pool cannot cover them.
 
         Each admitted request reserves its worst-case block demand
         (prompt + full ``max_new_tokens`` budget); when the pool's
@@ -366,6 +401,18 @@ class ServeEngine:
         (PagedKVCache asserts so), the head request always admits
         eventually: deferral, never deadlock, never ``CacheOOM``.
 
+        Under the chunked scheduler the reservation is OPTIMISTIC —
+        prompt + first token only — and a shortfall PREEMPTS strictly
+        younger running slots instead of only deferring: the queue head
+        is older than they are, so it reclaims their blocks and they
+        resume later (recompute + replay). This is what turns phased's
+        multi-hundred-millisecond admission stalls behind long-lived
+        generations into a bounded eviction cost, and what lets an
+        oversubscribed pool run cells the phased scheduler can only
+        defer. Requeue order keeps FIFO: the not-yet-prefilled
+        admission tail unadmits first, then victims (older than the
+        tail) land ahead of it at the queue front.
+
         A deferral snapshots ``free_blocks``; the serve loop skips the
         refill/unadmit churn — and stops treating the head as pending
         for the decode fusion check — until that count changes (blocks
@@ -374,12 +421,37 @@ class ServeEngine:
         ok = []
         for i, slot in enumerate(admitted):
             req = slot.request
-            cap = -(-(req.prompt_len + req.max_new_tokens)
-                    // self.block_size)
+            if chunked:
+                cap = -(-(req.prompt_len + 1) // self.block_size)
+            else:
+                cap = -(-(req.prompt_len + req.max_new_tokens)
+                        // self.block_size)
             if cap > self._paged_headroom():
-                for later in reversed(admitted[i:]):
+                if not chunked:
+                    for later in reversed(admitted[i:]):
+                        sched.unadmit(later)
+                    self._defer_free_blocks = self._paged.available_blocks
+                    break
+                # chunked: free the unprefillled tail's reservations,
+                # then evict strictly younger running slots until the
+                # head fits ( _pick_victim's strict-younger rule also
+                # keeps ``slot`` itself off the victim list)
+                for later in reversed(admitted[i + 1:]):
                     sched.unadmit(later)
-                self._defer_free_blocks = self._paged.available_blocks
+                me = (req.arrival_s, req.rid)
+                while cap > self._paged_headroom():
+                    victim = self._pick_victim(sched, me)
+                    if victim is None:
+                        break
+                    self._preempt_slot(sched, victim, results)
+                if cap > self._paged_headroom():
+                    sched.unadmit(slot)
+                    self._defer_free_blocks = self._paged.available_blocks
+                    break
+                self._slot_cap[slot.index] = cap
+                ok.append(slot)
+                # the tail re-admits on the next loop iteration, behind
+                # any just-preempted (older) victims
                 break
             self._slot_cap[slot.index] = cap
             ok.append(slot)
@@ -391,6 +463,65 @@ class ServeEngine:
         snap = getattr(self, "_defer_free_blocks", None)
         return (snap is not None and self._paged is not None
                 and self._paged.available_blocks == snap)
+
+    # ------------------------------------------------------------------
+    # Block-granular preemption (chunked scheduler)
+    # ------------------------------------------------------------------
+
+    def _ensure_with_preempt(self, sched: Scheduler, slot: Slot,
+                             n_tokens: int, results) -> bool:
+        """Grow ``slot``'s pool to ``n_tokens`` rows, preempting younger
+        requests on ``CacheOOM``. Returns True once the growth lands;
+        False when the slot itself was preempted instead.
+
+        Victims are STRICTLY YOUNGER than the beneficiary (arrival, then
+        rid): when every other active request is older, the beneficiary
+        defers ITSELF back to the queue front rather than evict an older
+        request — the oldest active request can therefore always preempt
+        its way to completion, so an oversubscribed pool degrades to
+        FIFO-ordered service instead of livelocking on mutual eviction.
+        """
+        req = slot.request
+        me = (req.arrival_s, req.rid)
+        while True:
+            try:
+                self._paged.ensure(slot.index, n_tokens)
+                return True
+            except CacheOOM:
+                victim = self._pick_victim(sched, me)
+                if victim is None:
+                    self._preempt_slot(sched, slot, results)
+                    return False
+                self._preempt_slot(sched, victim, results)
+
+    def _pick_victim(self, sched: Scheduler,
+                     me: tuple) -> Optional[Slot]:
+        """Youngest active request strictly younger than ``me``; ties
+        (same arrival) evict the fewest-blocks slot — the cheapest
+        recompute-from-prompt."""
+        cands = [s for s in sched.slots if s.active
+                 and (s.request.arrival_s, s.request.rid) > me]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: (s.request.arrival_s,
+                                         -self._paged.owned(s.index),
+                                         s.request.rid))
+
+    def _preempt_slot(self, sched: Scheduler, victim: Slot,
+                      results) -> int:
+        """Evict ``victim``: scheduler state first (the resume request
+        captures the emitted stream), then reclaim its blocks. Returns
+        the number of blocks actually returned to the free list (shared
+        blocks a prefix pin or another slot still references stay)."""
+        idx = victim.index
+        rid = victim.request.rid
+        sched.preempt(victim, results[rid].tokens)
+        freed = self._paged.free(idx)
+        self._slot_cap.pop(idx, None)
+        # blocks moved — a headroom-deferred queue head may now retry
+        self._defer_free_blocks = None
+        self.preemptions += 1
+        return freed
 
     # ------------------------------------------------------------------
     # Model-backed serve phases
@@ -490,8 +621,159 @@ class ServeEngine:
                     if self._paged is not None:
                         self._free_paged_slot(slot_index)
 
+    def _start_chunked(self, admitted, results) -> None:
+        """Begin chunked prefill for newly admitted slots: rewind
+        ``prefill_pos`` (refill set it to ``prompt_len``, the phased
+        default) to the prefix-match depth, adopting shared prefix
+        blocks when the index hits. The chunk executor advances from
+        there, one block-aligned slice per loop iteration."""
+        t_admit = self.clock()
+        for slot in admitted:
+            req = slot.request
+            res = results[req.rid]
+            res.slot = slot.index
+            # a preemption-resume keeps its original admission stamp:
+            # TTFT measures first service, not re-service
+            if res.admitted_s == 0.0:
+                res.admitted_s = t_admit
+            pre: list = []
+            if self.prefix_cache:
+                pre = self._paged.prefix_match(
+                    [int(t) for t in req.prompt])
+                if req.n_replay:
+                    # a resume rebuilds its emitted tail via decode
+                    # replay — adoption must stop short of the replay
+                    # region, leaving >= 1 original-prompt token so the
+                    # last prefill chunk is never empty
+                    pre = pre[:max(slot.prefill_target - 1, 0)
+                              // self.block_size]
+                st = self.prefix_stats
+                st["hit_requests" if pre else "miss_requests"] += 1
+                st["reused_blocks"] += len(pre)
+            if pre:
+                self._paged.adopt(slot.index, pre)
+            slot.prefill_pos = len(pre) * self.block_size
+            slot.pos = slot.prefill_pos   # KV rows landed so far
+
+    def _model_prefill_chunks(self, sched: Scheduler, results, steps,
+                              ts, ws, chunk_tokens: int) -> None:
+        """Run ONE ``chunk_tokens`` prefill slice for every mid-prefill
+        slot, batched per (suffix-bucket, prefix-depth) group — the
+        chunked scheduler's per-iteration prefill quantum.
+
+        Chunk ``j`` is just a suffix prefill against the slot's own
+        first ``prefill_pos / block_size`` blocks, so it reuses the
+        prefix-cache program verbatim (``_prefix_prefill_fn``). A
+        non-final chunk writes KV only — its argmax is discarded (the
+        slice's last token is not the prompt's last). The final chunk
+        emits the first token exactly like phased prefill and registers
+        the full prompt with the prefix index. Pool growth for a chunk
+        may preempt a younger slot — possibly one in this very wave,
+        which then drops out before grouping."""
+        slots = [s for s in sched.slots if s.prefilling]
+        # grow pools oldest-first so preemption flows old -> young
+        for slot in sorted(slots,
+                           key=lambda s: (s.request.arrival_s
+                                          if s.request else 0.0,
+                                          s.index)):
+            if not slot.prefilling:
+                continue   # preempted by an older slot's growth
+            end = min(slot.prefill_pos + chunk_tokens,
+                      slot.prefill_target)
+            self._ensure_with_preempt(sched, slot, end, results)
+        groups: dict[tuple, list] = {}
+        for slot in slots:
+            if not slot.prefilling:
+                continue
+            start = slot.prefill_pos
+            end = min(start + chunk_tokens, slot.prefill_target)
+            npre = start // self.block_size
+            bucket = self._prompt_bucket(end - start)
+            groups.setdefault((bucket, npre), []).append(
+                (slot, start, end))
+        for (bucket, npre), entries in sorted(groups.items()):
+            kp = self.n_slots
+            pre_len = npre * self.block_size
+            t0 = self.clock()
+            self._sample_power(ts, ws)   # bracket the chunk window
+            tokens = np.zeros((kp, bucket), np.int32)
+            last = np.zeros((kp,), np.int32)
+            slot_ids = np.full((kp,), self.n_slots, np.int32)
+            pre_blocks = np.zeros((kp, npre), np.int32)
+            for i, (slot, start, end) in enumerate(entries):
+                prompt = np.asarray(slot.request.prompt, np.int32)
+                tokens[i, :end - start] = prompt[start:end]
+                last[i] = end - start - 1
+                slot_ids[i] = slot.index
+                if npre:
+                    pre_blocks[i] = self._paged.block_ids(slot.index,
+                                                          pre_len)
+            if npre:
+                first, rows = self._prefix_prefill_fn(bucket, npre)(
+                    self.params, self.caches, jnp.asarray(tokens),
+                    jnp.asarray(last), jnp.asarray(pre_blocks))
+            else:
+                first, rows = self._serve_prefill(self.params,
+                                                  jnp.asarray(tokens),
+                                                  jnp.asarray(last))
+            nbk = -(-bucket // self.block_size)
+            blocks = np.full((kp, nbk), self._paged.n_blocks, np.int32)
+            for i, (slot, start, end) in enumerate(entries):
+                own = self._paged.block_ids(slot.index, end)[npre:]
+                blocks[i, :len(own)] = own
+            self.caches = insert_paged_rows(
+                self.caches, rows, jnp.asarray(blocks),
+                jnp.asarray(slot_ids), block_size=self.block_size)
+            finals = [(i, slot)
+                      for i, (slot, _s, end) in enumerate(entries)
+                      if end == slot.prefill_target]
+            emitting = [(i, s) for i, s in finals
+                        if not s.request.n_replay]
+            first_np = np.asarray(first) if emitting else None
+            t1 = self.clock()
+            self._sample_power(ts, ws)
+            rids = tuple(s.request.rid for s, _s, _e in entries)
+            # window energy splits across every chunking request;
+            # n_tokens counts only the first tokens actually emitted,
+            # keeping the credited-token accounting exact
+            steps.append(StepRecord("prefill", t0, t1, rids,
+                                    len(emitting)))
+            for slot, _start, end in entries:
+                slot.prefill_pos = end
+                slot.pos = end
+            for i, slot in finals:
+                req = slot.request
+                if req.n_replay:
+                    # resume: the original prompt is back in cache; the
+                    # emitted tail now replays through the decode program
+                    # as forced inputs (this chunk's argmax is a prefill
+                    # recompute of an already-emitted token — discard it,
+                    # decode's version is the stream's ground truth). No
+                    # prefix registration either: the tail blocks would
+                    # hold decode-built KV, and an adopter's phased twin
+                    # would prefill them — bit-divergence by adoption.
+                    slot.replay = req.n_replay
+                    slot.last_token = int(req.prompt[slot.prefill_pos])
+                    continue
+                if self.prefix_cache:
+                    self.prefix_stats["registered_blocks"] += \
+                        self._paged.prefix_register(
+                            slot.index, [int(t) for t in req.prompt])
+                res = results[req.rid]
+                # a resume that had already emitted keeps its stamp
+                if res.first_token_s == 0.0:
+                    res.first_token_s = t1
+                tok = int(first_np[i])
+                res.tokens.append(tok)
+                slot_index = slot.index
+                reason = sched.record_token(slot, tok)
+                if reason is not None:
+                    res.finish_s, res.finish_reason = t1, reason
+                    self._free_paged_slot(slot_index)
+
     def _decode_plan(self, sched: Scheduler, active,
-                     admission_blocked: bool = False) -> int:
+                     admission_blocked: bool = False,
+                     prefilling: bool = False) -> int:
         """How many decode steps can run before the host must look.
 
         Fused runs are only taken when the scheduler can PROVE no
@@ -507,6 +789,15 @@ class ServeEngine:
         not hold the whole pool at per-token cadence.
         """
         if self.decode_window <= 1:
+            return 1
+        if prefilling:
+            # a mid-chunked-prefill slot needs its next chunk between
+            # every decode step — a fused window would starve its TTFT
+            return 1
+        if any(s.replay for s in active):
+            # replay inputs are FORCED host-side tokens; a fused window
+            # chains argmax outputs on device and would feed the wrong
+            # token at the second micro-step
             return 1
         if (len(active) < self.n_slots and sched.n_pending
                 and not admission_blocked and sched.policy != "fixed"):
@@ -524,12 +815,28 @@ class ServeEngine:
         return max(1, min(k, self.decode_window))
 
     def _model_decode_run(self, sched: Scheduler, active, k: int, results,
-                          steps, ts, ws):
+                          steps, ts, ws, allow_preempt: bool = False):
         """Dispatch ``k`` decode steps with the token stream chained on
         device, then drain all outputs in one batched fetch."""
         if self.cache_kind == "paged":
-            for s in active:
-                self._paged.ensure(s.index, s.pos + k)
+            if allow_preempt:
+                # chunked mode: growth past the optimistic reservation
+                # evicts younger slots on CacheOOM; grow oldest-first so
+                # eviction flows old -> young, then drop evicted slots
+                for s in sorted(active,
+                                key=lambda s: (s.request.arrival_s
+                                               if s.request else 0.0,
+                                               s.index)):
+                    if not s.decoding:
+                        continue   # preempted by an older slot's growth
+                    self._ensure_with_preempt(sched, s, s.pos + k,
+                                              results)
+                active = [s for s in active if s.decoding]
+                if not active:
+                    return
+            else:
+                for s in active:
+                    self._paged.ensure(s.index, s.pos + k)
             if self.prefix_cache:
                 # copy-on-write net: decode writes land at pos >=
                 # prompt_len, past every registered (full, block-aligned)
@@ -576,14 +883,25 @@ class ServeEngine:
         if self.watchdog is not None:
             self.watchdog.observe(self._decode_idx, (t1 - t0) / k)
         self._decode_idx += 1
-        steps.append(StepRecord("decode", t0, t1, rids * k,
-                                k * len(rids), n_steps=k))
+        emitted = 0
         for out in outs_np:
             for s in active:
                 if s.request is None:     # finished at an earlier micro-step
                     continue
+                if s.replay:
+                    # preemption-resume replay: this step consumed a
+                    # forced emitted-tail token. Mid-replay outputs are
+                    # discarded (the stream already has them); the LAST
+                    # replay step's argmax is the next NEW token and
+                    # falls through to the normal emission path.
+                    s.replay -= 1
+                    if s.replay:
+                        s.pos += 1
+                        s.last_token = int(s.request.prompt[s.pos])
+                        continue
                 res = results[s.request.rid]
                 tok_i = int(out[s.index])
+                emitted += 1
                 res.tokens.append(tok_i)
                 slot_index = s.index
                 reason = sched.record_token(s, tok_i)
@@ -591,6 +909,11 @@ class ServeEngine:
                     res.finish_s, res.finish_reason = t1, reason
                     if self._paged is not None:
                         self._free_paged_slot(slot_index)
+        # rids credit every stepped slot with the window's energy
+        # (replay steps burn compute too); n_tokens counts only tokens
+        # actually appended to a stream, so token accounting stays exact
+        steps.append(StepRecord("decode", t0, t1, rids * k, emitted,
+                                n_steps=k))
 
     # ------------------------------------------------------------------
     # Warmup (compile outside any measured window)
@@ -598,7 +921,7 @@ class ServeEngine:
 
     def warmup(self, prompt_len: int = 8,
                requests: Optional[Sequence[Request]] = None,
-               repeat: int = 1):
+               repeat: int = 1, sched: Optional[str] = None):
         """Compile every serve program this engine can reach: the
         prompt-bucket prefill, the insert, and each decode program
         (every paged gather bucket gets crossed as the warmup requests
@@ -623,7 +946,7 @@ class ServeEngine:
         self.power_methods, self.watchdog = [], None
         try:
             for _ in range(max(int(repeat), 1)):
-                self.serve(requests, policy="continuous")
+                self.serve(requests, policy="continuous", sched=sched)
         finally:
             self.power_methods, self.watchdog = saved
             self.reset_prefix_cache()
@@ -655,15 +978,46 @@ class ServeEngine:
 
     def serve(self, requests: Sequence[Request], *,
               policy: str = "continuous",
-              poll_s: float = 0.002) -> ServeRunResult:
+              poll_s: float = 0.002,
+              sched: Optional[str] = None,
+              chunk_tokens: Optional[int] = None) -> ServeRunResult:
         """Run a request set to completion under the given policy.
 
         Request ``arrival_s`` values are relative to run start; the
         engine sleeps (``sleep_fn``) while the queue is empty and slots
         are idle, so wall time includes genuine arrival gaps.
+
+        ``sched``/``chunk_tokens`` override the engine defaults for
+        this run: ``"chunked"`` interleaves block-aligned prefill
+        slices with decode steps and backs decode growth with
+        preemption (see module docstring) — paged cache, model mode,
+        attention-only families.
         """
+        mode = sched or self.sched
+        assert mode in ("phased", "chunked"), mode
+        ct = int(chunk_tokens if chunk_tokens is not None
+                 else self.chunk_tokens)
+        chunked = mode == "chunked"
+        if chunked:
+            assert not self._scripted, (
+                "chunked prefill drives the jitted model programs — "
+                "scripted engines serve phased only")
+            assert self.cache_kind == "paged", (
+                "chunked prefill + preemption need block-granular "
+                "reclaim (cache='paged')")
+            assert ct > 0 and ct % self.block_size == 0, (
+                f"chunk_tokens {ct} must be a positive multiple of "
+                f"block_size {self.block_size}: chunk boundaries must "
+                f"land on block edges so suffix chunks can gather the "
+                f"already-prefilled prefix KV block-wise")
         if not self._scripted:
             self._ensure_cache()
+            if chunked:
+                assert self.c.family not in ("ssm", "hybrid"), (
+                    "chunked prefill re-enters the prompt mid-sequence "
+                    "via prefix_kv — attention-only families (a mamba "
+                    "recurrence cannot restart at a block boundary)")
+            self.preemptions = 0
         sched = Scheduler(self.n_slots, self.max_len, policy=policy)
         watchdog = self.watchdog
 
@@ -696,8 +1050,15 @@ class ServeEngine:
                 admitted = sched.refill(now_rel)
                 if admitted and not self._scripted \
                         and self.cache_kind == "paged":
-                    admitted = self._admit_paged(sched, admitted)
-            if admitted and not self._scripted:
+                    admitted = self._admit_paged(sched, admitted, results,
+                                                 chunked=chunked)
+            if chunked:
+                if admitted:
+                    self._start_chunked(admitted, results)
+                if any(s.prefilling for s in sched.slots):
+                    self._model_prefill_chunks(sched, results, steps,
+                                               ts, ws, ct)
+            elif admitted and not self._scripted:
                 self._model_prefill_admitted(sched, admitted, results,
                                              steps, ts, ws)
             elif admitted:
@@ -717,14 +1078,17 @@ class ServeEngine:
                     reason = sched.record_token(slot, int(first))
                     if reason is not None:
                         res.finish_s, res.finish_reason = t1, reason
-            # -- decode over all active slots -----------------------------
-            active = sched.active_slots()
+            # -- decode over all fully-prefilled slots --------------------
+            active = sched.decode_slots()
+            prefilling = any(s.prefilling for s in sched.slots)
             if active and not self._scripted:
                 k = self._decode_plan(
                     sched, active,
-                    admission_blocked=self._admission_blocked())
+                    admission_blocked=self._admission_blocked(),
+                    prefilling=prefilling)
                 self._model_decode_run(sched, active, k, results,
-                                       steps, ts, ws)
+                                       steps, ts, ws,
+                                       allow_preempt=chunked)
             elif active:
                 rids = tuple(s.request.rid for s in active)
                 t0 = self.clock()
@@ -746,7 +1110,7 @@ class ServeEngine:
                     reason = sched.record_token(s, tok)
                     if reason is not None:
                         res.finish_s, res.finish_reason = t1, reason
-            elif sched.n_pending:
+            elif sched.n_pending and not prefilling:
                 # idle: nothing admitted yet — wait for the next arrival
                 nxt = sched.next_arrival_s()
                 wait = (t_start + nxt) - self.clock() if nxt is not None \

@@ -33,6 +33,20 @@ class Request:
     arrival_s: float = 0.0
     eos_id: Optional[int] = None        # None -> run to max_new_tokens
     tenant: str = ""                    # multi-tenant traces (serve.traffic)
+    #: True for a preemption-resume request (``Scheduler.preempt``): the
+    #: prompt already contains previously-emitted tokens, so the engine
+    #: must append its prefill token to the existing result stream
+    #: without resetting the admission/first-token timestamps.
+    resumed: bool = False
+    #: how many trailing prompt tokens are previously-EMITTED tokens
+    #: (0 for fresh requests). The engine prefills only the original
+    #: prompt (``prompt_len - n_replay`` tokens) and REPLAYS the tail
+    #: through the decode program — the emitted tokens were produced by
+    #: decode steps, and prefill's attention numerics are not bit-equal
+    #: to decode's, so recomputing them via prefill would let low-bit KV
+    #: drift flip a downstream argmax. Replay keeps the resumed stream
+    #: bit-identical to the never-preempted one by construction.
+    n_replay: int = 0
 
     @property
     def prompt_len(self) -> int:

@@ -23,6 +23,7 @@ Two policies share this class:
 """
 from __future__ import annotations
 
+import bisect
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -41,10 +42,41 @@ class Slot:
     pos: int = 0          # next KV write position == tokens in the row
     generated: int = 0
     last_token: int = 0   # input token for the next decode step
+    #: prompt tokens prefilled so far. The phased scheduler prefills the
+    #: whole prompt at admission (``refill`` sets this to ``prompt_len``
+    #: immediately); the chunked engine resets it to the prefix-match
+    #: depth and advances it one ``chunk_tokens`` slice per iteration —
+    #: a slot decodes only once the prompt is fully prefilled.
+    prefill_pos: int = 0
+    #: preemption-resume replay: previously-emitted prompt-tail tokens
+    #: still to feed through the DECODE program as forced inputs (their
+    #: logits are discarded except the last, which continues the
+    #: stream). Prefill numerics are not bit-equal to decode's, so the
+    #: emitted tail must be rebuilt by the same program that built it.
+    replay: int = 0
 
     @property
     def active(self) -> bool:
         return self.request is not None
+
+    @property
+    def prefill_target(self) -> int:
+        """Where chunked prefill stops: the ORIGINAL prompt. A resume
+        request's trailing ``n_replay`` emitted tokens rebuild their KV
+        via decode replay instead."""
+        return self.request.prompt_len - self.request.n_replay
+
+    @property
+    def prefilling(self) -> bool:
+        """Mid-chunked-prefill: admitted but the prefillable prompt
+        region isn't fully in cache yet — the slot must not take decode
+        steps."""
+        return (self.request is not None
+                and self.prefill_pos < self.prefill_target)
+
+    @property
+    def decoding(self) -> bool:
+        return self.request is not None and not self.prefilling
 
 
 @dataclass
@@ -91,17 +123,29 @@ class Scheduler:
 
     # -- submission ------------------------------------------------------
     def submit(self, req: Request) -> None:
-        """Register a request; it becomes admissible once now >= arrival."""
+        """Register a request; it becomes admissible once now >= arrival.
+
+        ``_arrivals`` is kept sorted by insertion point (``insort_right``
+        keyed on ``arrival_s``) — re-sorting the whole list per submit
+        was O(n^2 log n) over an n-request trace. Right-insertion keeps
+        submission order among equal-arrival ties, so FIFO service is
+        stable however the trace was built.
+        """
         cap = req.prompt_len + req.max_new_tokens
         assert cap <= self.max_len, (
             f"request {req.rid} needs {cap} cache rows > max_len "
             f"{self.max_len}")
-        self._arrivals.append(req)
-        self._arrivals.sort(key=lambda r: r.arrival_s)
+        bisect.insort_right(self._arrivals, req,
+                            key=lambda r: r.arrival_s)
 
     def _absorb_arrivals(self, now: float) -> None:
-        while self._arrivals and self._arrivals[0].arrival_s <= now:
-            self.queue.append(self._arrivals.pop(0))
+        idx = 0
+        while idx < len(self._arrivals) \
+                and self._arrivals[idx].arrival_s <= now:
+            idx += 1
+        if idx:
+            self.queue.extend(self._arrivals[:idx])
+            del self._arrivals[:idx]
 
     def next_arrival_s(self) -> Optional[float]:
         return self._arrivals[0].arrival_s if self._arrivals else None
@@ -135,12 +179,21 @@ class Scheduler:
             slot.pos = req.prompt_len     # prefill fills rows [0, len)
             slot.generated = 0
             slot.last_token = 0
+            # phased default: the whole prompt prefills at admission.
+            # The chunked engine rewinds this to the prefix-match depth
+            # and advances chunk by chunk.
+            slot.prefill_pos = req.prompt_len
             admitted.append(slot)
         return admitted
 
     # -- step bookkeeping ------------------------------------------------
     def active_slots(self) -> list[Slot]:
         return [s for s in self.slots if s.active]
+
+    def decode_slots(self) -> list[Slot]:
+        """Slots eligible for a decode step: active AND fully prefilled
+        (mid-chunk slots ride along idle until their prompt lands)."""
+        return [s for s in self.slots if s.decoding]
 
     def record_token(self, slot: Slot, token: int) -> Optional[str]:
         """Account one generated token for ``slot``.
@@ -173,6 +226,49 @@ class Scheduler:
     def _free(self, slot: Slot) -> None:
         slot.request = None
         slot.generated = 0
+        slot.prefill_pos = 0
+        slot.replay = 0
+
+    def preempt(self, slot: Slot, tokens) -> Request:
+        """Evict a RUNNING request from its slot, to be resumed later by
+        recompute-from-prompt: the resume request's prompt is the
+        original prompt plus every token already emitted (``tokens`` is
+        the engine's result stream for this rid), its budget is the
+        remaining budget, and it re-enters the queue FRONT so eviction
+        never reorders service. The original-prompt region prefills
+        again; the emitted tail (``n_replay``) is instead REPLAYED
+        through the decode program (the program that first produced its
+        KV — see ``Request.n_replay``), whose last replay logits ARE
+        the next token: the resumed stream continues bit-identically
+        and already-emitted tokens are never re-emitted.
+
+        The caller (the engine) reclaims the slot's cache blocks; this
+        method owns only the scheduler state. Works mid-chunked-prefill
+        too: nothing was emitted yet, so the resume request is simply
+        the original one.
+        """
+        req = slot.request
+        assert req is not None, f"preempting idle slot {slot.index}"
+        remaining = req.max_new_tokens - slot.generated
+        assert remaining >= 1, (
+            "a slot with exhausted budget frees, never preempts")
+        if slot.generated:
+            emitted = [int(t) for t in tokens[-slot.generated:]]
+            prompt = np.concatenate([
+                np.asarray(req.prompt, np.int32),
+                np.asarray(emitted, np.int32)])
+        else:
+            prompt = req.prompt
+        resume = Request(rid=req.rid, prompt=prompt,
+                         max_new_tokens=remaining,
+                         arrival_s=req.arrival_s, eos_id=req.eos_id,
+                         tenant=req.tenant, resumed=True,
+                         # a re-preempted resume replays its WHOLE
+                         # emitted history, not just this admission's
+                         n_replay=req.n_replay + slot.generated)
+        self._free(slot)
+        self.queue.appendleft(resume)
+        return resume
 
     def unadmit(self, slot: Slot) -> Request:
         """Return a just-admitted (not yet prefilled) request to the
@@ -189,22 +285,30 @@ class Scheduler:
 
     # -- batched views for the decode step -------------------------------
     def input_tokens(self) -> np.ndarray:
-        """(n_slots,) int32 — each slot's next input token (0 if idle)."""
-        return np.asarray([s.last_token if s.active else 0
+        """(n_slots,) int32 — each slot's next input token (0 if idle).
+
+        All three step views key on ``decoding``, not ``active``: a slot
+        mid-chunked-prefill has no last token yet and must ride through
+        the decode step as an idle row (its dead write lands at the
+        parked position / the paged trash block).
+        """
+        return np.asarray([s.last_token if s.decoding else 0
                            for s in self.slots], np.int32)
 
     def positions(self) -> np.ndarray:
         """(n_slots,) int32 — per-slot KV write position.
 
-        Idle slots report ``max_len - 1``: a valid in-bounds row whose
-        write is harmless (the row is dead until the next prefill
-        overwrites it) — keeps the jitted decode free of masking.
+        Idle (and mid-prefill) slots report ``max_len - 1``: a valid
+        in-bounds row whose write is harmless (the row is dead until the
+        next prefill overwrites it; a mid-prefill paged slot's unowned
+        table columns point at the trash block) — keeps the jitted
+        decode free of masking.
         """
-        return np.asarray([s.pos if s.active else self.max_len - 1
+        return np.asarray([s.pos if s.decoding else self.max_len - 1
                            for s in self.slots], np.int32)
 
     def active_mask(self) -> np.ndarray:
-        return np.asarray([s.active for s in self.slots], bool)
+        return np.asarray([s.decoding for s in self.slots], bool)
 
     # -- run state -------------------------------------------------------
     @property

@@ -253,6 +253,28 @@ _PRESETS = {
                    burst_factor=8.0, burst_fraction=0.2,
                    prompt_len=(8, 16), output_len=(4, 12)),
     ),
+    # the chunked-scheduler stress trace, non-saturated on average so
+    # the TTFT tail reflects SCHEDULING events rather than backlog:
+    # bursty document-length prompts (~10x the chat median) and a
+    # long-GENERATION tenant ride on a steady chat stream. The gens are
+    # what separates the schedulers on a tight pool (serve_slo runs
+    # this trace against 17 blocks): phased reserves each gen's
+    # worst-case footprint (6 blocks) for its whole multi-hundred-ms
+    # lifetime, so a doc arriving while two gens live DEFERS until one
+    # finishes — and every later arrival queues behind it (FIFO).
+    # Chunked admits the same doc immediately by preempting the
+    # youngest gen (blocks reclaimed, gen resumes by recompute+replay),
+    # so its ttft_p99 is a prefill, not a deferral — the cliff the
+    # sched axis (and the ci.sh ttft_p99 gate) measures.
+    "long_prefill": (
+        TenantSpec("chat", weight=0.55, rate_hz=40.0,
+                   prompt_len=(4, 8), output_len=(4, 10)),
+        TenantSpec("doc", weight=0.15, rate_hz=8.0, arrival="bursty",
+                   burst_factor=5.0, burst_fraction=0.3,
+                   prompt_len=(64, 80), output_len=(2, 6)),
+        TenantSpec("gen", weight=0.3, rate_hz=18.0,
+                   prompt_len=(4, 8), output_len=(72, 88)),
+    ),
     "shared_prefix": (
         TenantSpec("assist-a", weight=0.4, rate_hz=120.0,
                    prompt_len=(4, 12), output_len=(4, 12),

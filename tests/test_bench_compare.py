@@ -363,6 +363,23 @@ def test_degenerate_measurements_gate_as_regressions():
                        ).status == REGRESSED
 
 
+def test_equal_inf_is_unchanged_but_any_inf_transition_gates():
+    """inf can be an honest value (wh_per_slo_request when nothing met
+    the SLO): a cell saturated on BOTH sides is the same regime and
+    must not flag forever, while entering or leaving inf is a regime
+    change that gates until a human re-promotes."""
+    inf = float("inf")
+    same = diff_metric("wh_per_slo_request", inf, inf, 0.2)
+    assert same.status == UNCHANGED
+    assert diff_metric("wh_per_slo_request", 0.5, inf, 0.2
+                       ).status == REGRESSED   # collapsed to inf
+    assert diff_metric("wh_per_slo_request", inf, 0.5, 0.2
+                       ).status == REGRESSED   # escaped inf: re-promote
+    # opposite-sign infinities are NOT the same regime
+    assert diff_metric("wh_per_slo_request", inf, -inf, 0.2
+                       ).status == REGRESSED
+
+
 def test_watchdog_rel_std_feeds_the_tolerance_model():
     w = StragglerWatchdog(warmup=3)
     assert w.rel_std() == 0.0

@@ -56,6 +56,23 @@ def reqs(n, *, budget=4, gap=0.0, prompt_len=4, eos=None):
 # ---------------------------------------------------------------------------
 
 
+def test_submit_sorts_arrivals_and_keeps_equal_arrival_ties_fifo():
+    """submit() maintains the arrival list by insertion (insort_right
+    keyed on arrival_s): out-of-order submission still serves by
+    arrival, and equal-arrival ties keep submission order (stable FIFO
+    — right-insertion lands each tie after its equals)."""
+    s = Scheduler(4, 64)
+    for r in reqs(4, gap=0.0):           # every arrival at t = 0
+        s.submit(r)
+    assert [sl.request.rid for sl in s.refill(0.0)] == [0, 1, 2, 3]
+
+    s2 = Scheduler(4, 64)
+    for r in reversed(reqs(4, gap=1.0)):   # submit newest-first
+        s2.submit(r)
+    assert s2.next_arrival_s() == 0.0
+    assert [sl.request.rid for sl in s2.refill(10.0)] == [0, 1, 2, 3]
+
+
 def test_refill_admits_in_arrival_order():
     s = Scheduler(2, 64)
     for r in reqs(4, gap=1.0):

@@ -36,6 +36,26 @@ def test_percentile_edges():
     assert percentile(xs, 99.0) == 5.0
 
 
+def test_percentile_nearest_rank_boundaries():
+    """Nearest-rank definition pinned at its boundaries: rank
+    ``ceil(q/100 * n)`` (1-indexed), with exact-multiple ranks snapped
+    so float fuzz never bumps them up an element."""
+    xs100 = [float(i) for i in range(1, 101)]
+    assert percentile(xs100, 1.0) == 1.0      # rank 1, not 2
+    assert percentile(xs100, 50.0) == 50.0    # exact multiple: rank 50
+    assert percentile(xs100, 99.0) == 99.0    # rank 99, NOT the max
+    assert percentile(xs100, 99.5) == 100.0   # rank ceil(99.5) = 100
+    xs4 = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs4, 25.0) == 1.0       # r = 1.0 lands ON rank 1
+    assert percentile(xs4, 75.0) == 3.0
+    assert percentile(xs4, 76.0) == 4.0       # just past: next rank
+    # p99 of n < 100 samples is the max — what the serve_slo ttft_p99
+    # column (n=48 smoke trace) actually reports
+    assert percentile(list(range(48, 0, -1)), 99.0) == 48
+    # q=60 of 5 elements: r = 3.0 exactly; snap keeps it at rank 3
+    assert percentile([1.0, 2.0, 3.0, 4.0, 5.0], 60.0) == 3.0
+
+
 def test_tpot_edge_single_token():
     r = _result(n_tokens=1, ttft=0.5)
     assert r.tpot_s == 0.0                   # no decode phase to time
@@ -126,5 +146,6 @@ def test_missing_tenant_without_default_raises():
 def test_quantiles_in_report():
     rs = [_result(rid=i, ttft=float(i + 1) / 10) for i in range(10)]
     rep = evaluate_slo(rs, SLO(ttft_s=10.0, tpot_s=10.0))
-    assert rep.ttft_p50_s == pytest.approx(0.6)
+    # nearest-rank p50 over 10 samples is the 5th smallest (index 4)
+    assert rep.ttft_p50_s == pytest.approx(0.5)
     assert rep.ttft_p99_s == pytest.approx(1.0)
