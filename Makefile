@@ -42,7 +42,7 @@ bench-compare:   ## fresh smoke run gated against the committed baselines
 	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench \
 	    --fail-on-regression --fail-on-missing
 
-WORKLOADS ?= serve llm_train kernels serve_slo
+WORKLOADS ?= serve llm_train kernels serve_slo resilience
 LABEL ?= local run
 
 # promotion REPLACES the baseline store, so the old->new compare is

@@ -1,8 +1,9 @@
-"""Fault-tolerance demo: train, crash mid-run, auto-resume from the atomic
-checkpoint, and plan an elastic rescale after losing devices — driven as
-a WorkloadSpec through the unified bench runner, so the demo's phases are
-ordinary recorded steps (one ResultRecord with crash/resume/rescale
-metrics under artifacts/examples/) instead of hand-rolled script logic.
+"""Fault-tolerance demo: a seeded fault schedule crashes training mid-run,
+the bounded-restart supervisor backs off and auto-resumes from the newest
+valid atomic checkpoint, and an elastic rescale is planned after losing
+devices — a thin driver over the ``repro.faults`` subsystem, recorded as
+a WorkloadSpec through the unified bench runner (one ResultRecord with
+crash/resume/rescale metrics under artifacts/examples/).
 
   PYTHONPATH=src python examples/fault_tolerance.py
 """
@@ -13,61 +14,59 @@ import tempfile
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.bench import WorkloadRunner, get_workload, workload
-from repro.ckpt.checkpoint import latest_step
+from repro.bench.spec import Placement
 from repro.ckpt.elastic import plan_rescale
 from repro.configs import SHAPES, get_config
 from repro.core import Space
+from repro.faults.schedule import FaultSchedule
 from repro.launch.train import main as train_main
+
+STEPS = 30
 
 
 @workload(
     "fault_tolerance",
-    analog="example: crash -> atomic-checkpoint resume -> elastic rescale",
-    space=Space({"fail_at_step": [25]}),
+    analog="example: fault schedule -> supervised resume -> elastic rescale",
+    space=Space({"fault_preset": ["crash_mid"]}),
     tags=("example",),
-    result_columns=["fail_at_step", "crashed_at_ckpt", "resumed_from",
+    result_columns=["fault_preset", "schedule_hash", "resumed_from",
                     "final_step", "rescale_ok"],
     primary_metric="final_step",
 )
 def build(pt, ctx):
-    """Injected-failure train + auto-resume + rescale plan."""
+    """Supervised crash/resume train + elastic rescale plan."""
+    preset = pt["fault_preset"]
     ckpt = ctx.memo("ft_ckpt_dir", tempfile.mkdtemp)
-    base = ["--arch", "gpt-117m", "--preset", "tiny", "--steps", "30",
-            "--global-batch", "4", "--seq-len", "64",
-            "--ckpt-dir", ckpt, "--ckpt-every", "10"]
 
-    def crash():
-        print("== 1. train with an injected failure at step "
-              f"{pt['fail_at_step']}")
-        try:
-            train_main(base + ["--fail-at-step", str(pt["fail_at_step"])])
-        except RuntimeError as e:
-            print(f"   crashed as injected: {e}")
-        step = latest_step(ckpt)
-        print(f"   latest atomic checkpoint: step {step}")
-        return {"crashed_at_ckpt": step}
-
-    def resume():
-        print("== 2. restart with the same command -> auto-resume")
-        res = train_main(base)
-        assert res.resumed_from is not None
-        print(f"   resumed from step {res.resumed_from}, "
-              f"finished at {res.final_step}")
-        return {"resumed_from": res.resumed_from,
+    def supervised():
+        faults = FaultSchedule.from_preset(preset, seed=0, total_steps=STEPS)
+        print(f"== 1. train under fault schedule {faults!r}")
+        print("   (the supervisor catches the crash, backs off, and "
+              "resumes from the newest valid checkpoint)")
+        res = train_main(["--arch", "gpt-117m", "--preset", "tiny",
+                          "--steps", str(STEPS), "--global-batch", "4",
+                          "--seq-len", "64", "--ckpt-dir", ckpt,
+                          "--ckpt-every", "10",
+                          "--fault-preset", preset, "--fault-seed", "0"])
+        assert res.final_step == STEPS, res
+        assert res.resumed_from is not None, "run never crashed/resumed"
+        return {"schedule_hash": faults.schedule_hash,
+                "resumed_from": res.resumed_from,
                 "final_step": res.final_step}
 
     def rescale():
-        print("== 3. elastic rescale plan after losing 32 chips of a "
+        print("== 2. elastic rescale plan after losing 32 chips of a "
               "256-pod")
         c = get_config("granite-8b")
-        plan = plan_rescale(c, SHAPES["train_4k"], (16, 16),
+        plan = plan_rescale(c, SHAPES["train_4k"],
+                            Placement.of({"dp": 16, "tp": 16}),
                             lost_devices=32)
         print(f"   {plan.old_shape} -> {plan.new_shape} ({plan.note})")
         print("   checkpoints are mesh-agnostic: restore() against the "
               "new mesh's shardings reshards automatically")
         return {"rescale_ok": 1}
 
-    return {"crash": crash, "resume": resume, "rescale": rescale}
+    return {"supervised": supervised, "rescale": rescale}
 
 
 def main():

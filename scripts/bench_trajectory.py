@@ -45,7 +45,9 @@ TRAJECTORY_METRICS = ("decode_tok_s", "tokens_per_s", "images_per_s",
                       "speedup_vs_slotted", "tok_s_per_device",
                       "scaling_efficiency", "wh_per_token_scaling",
                       "us", "ms", "goodput", "ttft_p99", "tpot_p99",
-                      "wh_per_slo_request")
+                      "wh_per_slo_request", "goodput_tokens_per_s",
+                      "recovery_s", "wasted_tokens",
+                      "wh_overhead_resilience")
 
 
 def _num(x):

@@ -122,6 +122,47 @@ REPRO_PAGED_IMPL=pallas-interpret python -m repro.bench run --suite serve \
 #     single-run vs_phased ratios with a generous compare tolerance.
 python scripts/check_ttft_gate.py
 
+# 3e. Resilience gate (ISSUE 9 acceptance): the crash_mid smoke cell
+#     must complete through the bounded-restart supervisor — crash
+#     mid-run, backoff, resume from the newest valid checkpoint — with
+#     the recompute bounded by the checkpoint cadence and the resumed
+#     loss trace element-equal to the fault-free twin's (loss_bitmatch:
+#     resume restored the real state and the step-indexed data stream
+#     stayed aligned). The none-preset twin cell must not restart at
+#     all, and every cell carries its schedule_hash stamp.
+python - <<'EOF'
+import json, math, sys
+recs = json.load(open("artifacts/ci-bench/resilience/results.json"))["records"]
+cells = {r["point"]["fault_preset"]: r for r in recs if r["status"] == "ok"}
+crash, none = cells.get("crash_mid"), cells.get("none")
+if crash is None or none is None:
+    sys.exit(f"resilience smoke cells missing: have {sorted(cells)}")
+m, ck = crash["metrics"], int(crash["point"]["ckpt_every"])
+if m["final_step"] != 30:
+    sys.exit(f"crash_mid cell never finished: final_step={m['final_step']}")
+if m["restarts"] < 1:
+    sys.exit("crash_mid cell never crashed — the schedule went dead")
+bound = ck * m["tokens_per_step"]
+if m["wasted_tokens"] > bound:
+    sys.exit(f"wasted_tokens {m['wasted_tokens']} exceeds ckpt cadence "
+             f"bound {bound} — resume skipped a usable checkpoint")
+if m["loss_bitmatch"] != 1.0:
+    sys.exit("resumed loss trace diverged from the fault-free twin")
+if not math.isfinite(m["wh_overhead_resilience"]):
+    sys.exit(f"wh_overhead_resilience not finite: "
+             f"{m['wh_overhead_resilience']}")
+if none["metrics"]["restarts"] != 0 or none["metrics"]["loss_bitmatch"] != 1.0:
+    sys.exit(f"fault-free twin cell dirty: {none['metrics']}")
+missing_hash = [p for p, r in cells.items()
+                if not r["metrics"].get("schedule_hash")]
+if missing_hash:
+    sys.exit(f"cells without a schedule_hash stamp: {missing_hash}")
+print(f"resilience gate: restarts={m['restarts']} "
+      f"wasted_tokens={m['wasted_tokens']}<={bound} "
+      f"recovery_s={m['recovery_s']:.3f} loss_bitmatch=1 "
+      f"wh_overhead={m['wh_overhead_resilience']:.4f}")
+EOF
+
 # 4. Regression gate: the smoke run just produced must not be slower or
 #    hungrier than the committed baselines beyond tolerance. The base
 #    tolerance is 0.3 (was 0.45, was 0.6): every workload stamps

@@ -103,6 +103,17 @@ COMPARED_METRICS: dict[str, tuple[bool, float]] = {
     "speedup_vs_phased": (True, 0.25),
     "ttft_p99_vs_phased": (False, 1.5),
     "goodput_vs_phased": (True, 0.15),
+    # resilience (faults/ + bench.workloads.resilience) — crash-to-first-
+    # resumed-step wall time, recompute cost in tokens, end-to-end
+    # delivered-token rate including recovery, and the energy premium vs
+    # the fault-free twin. recovery_s and the Wh overhead are differences
+    # of CPU wall-clock quantities an order of magnitude noisier than a
+    # throughput cell, hence the wide bases (the workload stamps wider
+    # still via compare_tols).
+    "recovery_s": (False, 0.50),
+    "wasted_tokens": (False, 0.30),
+    "goodput_tokens_per_s": (True, 0.25),
+    "wh_overhead_resilience": (False, 2.0),
 }
 
 

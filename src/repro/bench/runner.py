@@ -180,21 +180,27 @@ class WorkloadRunner:
         ctx.placement = placement
         ctx.power_methods = self._power_for(placement.n_devices)
         t0 = time.perf_counter()
-        ok, step_fns, attempts = run_attempts(
+        backoff_total = 0.0
+        ok, step_fns, info = run_attempts(
             "build", lambda: spec.build(pt, ctx), self.retries,
-            log_prefix=f"[{spec.name}] ")
-        rec.attempts = attempts
+            log_prefix=f"[{spec.name}] ", backoff_base=0.05)
+        rec.attempts = info.attempts
+        backoff_total += info.backoff_s
         if not ok:
             rec.status, rec.error = "error", step_fns["build_error"]
             return rec
         for name, fn in step_fns.items():
-            ok, metrics, attempts = run_attempts(
-                name, fn, self.retries, log_prefix=f"[{spec.name}] ")
-            rec.attempts = max(rec.attempts, attempts)
+            ok, metrics, info = run_attempts(
+                name, fn, self.retries, log_prefix=f"[{spec.name}] ",
+                backoff_base=0.05)
+            rec.attempts = max(rec.attempts, info.attempts)
+            backoff_total += info.backoff_s
             if not ok:
                 rec.status, rec.error = "error", metrics[f"{name}_error"]
                 break
             rec.metrics.update(metrics or {})
+        if backoff_total > 0.0 or rec.attempts > 1:
+            rec.metrics["retry_backoff_s"] = round(backoff_total, 6)
         dt = time.perf_counter() - t0
         if self.watchdog.observe(len(self.records), dt):
             rec.metrics["straggler"] = True

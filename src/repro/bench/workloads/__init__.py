@@ -10,6 +10,7 @@ from repro.bench.workloads import (  # noqa: F401 - registration imports
     kernels,
     llm_train,
     pipeline_gpt,
+    resilience,
     resnet50,
     roofline,
     serve,

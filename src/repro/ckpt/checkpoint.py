@@ -17,6 +17,7 @@ files are a strict extension (process id in the filename).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
@@ -30,6 +31,18 @@ import numpy as np
 
 Params = Any
 _SEP = "/"
+
+
+def _fsync_dir(path) -> None:
+    """fsync a directory so its entries (renames, new files) are durable."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return  # platform without directory fds; best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -59,15 +72,25 @@ def save(tree, out_dir, step: int, extra_meta: Optional[dict] = None) -> str:
             # numpy can't round-trip ml_dtypes: store as a same-width uint
             # view and record the logical dtype in the manifest
             width = {1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize]
-            np.save(tmp / fn, arr.view(width))
+            data = arr.view(width)
         else:
-            np.save(tmp / fn, arr)
+            data = arr
+        with open(tmp / fn, "wb") as f:
+            np.save(f, data)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"][key] = {
-            "file": fn, "shape": list(arr.shape), "dtype": logical}
-    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            "file": fn, "shape": list(arr.shape), "dtype": logical,
+            "sha1": hashlib.sha1(data.tobytes()).hexdigest()[:16]}
+    with open(tmp / "manifest.json", "w") as f:
+        f.write(json.dumps(manifest, indent=1))
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic publish
+    _fsync_dir(out)         # make the rename itself durable
     return str(final)
 
 
@@ -78,6 +101,62 @@ def latest_step(out_dir) -> Optional[int]:
     steps = [int(m.group(1)) for p in out.iterdir()
              if (m := re.fullmatch(r"step_(\d+)", p.name))]
     return max(steps) if steps else None
+
+
+def _all_steps(out_dir) -> list[int]:
+    out = pathlib.Path(out_dir)
+    if not out.exists():
+        return []
+    return sorted(int(m.group(1)) for p in out.iterdir()
+                  if (m := re.fullmatch(r"step_(\d+)", p.name)))
+
+
+def verify_step(out_dir, step: int) -> bool:
+    """True iff ``step_N/`` is a complete, uncorrupted checkpoint:
+    parseable manifest, every leaf file present, and (when the manifest
+    carries digests) per-leaf sha1 matching the bytes on disk."""
+    d = pathlib.Path(out_dir) / f"step_{step}"
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+        for v in manifest["leaves"].values():
+            arr = np.load(d / v["file"])
+            if list(arr.shape) != list(v["shape"]):
+                return False  # same-width uint views preserve shape
+            want = v.get("sha1")
+            if want is not None and hashlib.sha1(
+                    arr.tobytes()).hexdigest()[:16] != want:
+                return False
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return False
+    return True
+
+
+def latest_valid_step(out_dir) -> Optional[int]:
+    """Newest step that passes :func:`verify_step` (corruption-aware
+    variant of :func:`latest_step`)."""
+    for s in reversed(_all_steps(out_dir)):
+        if verify_step(out_dir, s):
+            return s
+    return None
+
+
+def restore_resilient(template, out_dir, shardings=None):
+    """Restore the newest *valid* checkpoint, skipping corrupted or
+    partial steps (falls back to the previous atomic step).
+
+    Returns ``(tree, manifest, skipped)`` where ``skipped`` lists the
+    step numbers that failed verification, newest first.
+    """
+    skipped: list[int] = []
+    for s in reversed(_all_steps(out_dir)):
+        if verify_step(out_dir, s):
+            tree, manifest = restore(template, out_dir, step=s,
+                                     shardings=shardings)
+            return tree, manifest, skipped
+        skipped.append(s)
+    raise FileNotFoundError(
+        f"no valid checkpoints in {out_dir}"
+        + (f" (corrupted: {skipped})" if skipped else ""))
 
 
 def restore(template, out_dir, step: Optional[int] = None,
@@ -129,16 +208,20 @@ class CheckpointManager:
         self.out_dir = pathlib.Path(out_dir)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         self.last_saved: Optional[int] = None
 
     def save_async(self, tree, step: int, extra_meta: Optional[dict] = None):
-        self.wait()  # one in-flight save at a time
+        self.wait()  # one in-flight save at a time (re-raises prior failure)
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot (sync, cheap)
 
         def work():
-            save(host_tree, self.out_dir, step, extra_meta)
-            self.last_saved = step
-            self._gc()
+            try:
+                save(host_tree, self.out_dir, step, extra_meta)
+                self.last_saved = step
+                self._gc()
+            except BaseException as e:  # surfaced at wait()/next save
+                self._exc = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -150,9 +233,14 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
+        """Join any in-flight save; re-raise an exception it captured
+        (a failed background save must not be silently dropped)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _gc(self):
         steps = sorted(

@@ -8,10 +8,11 @@ derives the rescale plan and validates batch divisibility.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Union
 
 import jax
 
+from repro.bench.spec import Placement
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.mesh import make_mesh
 from repro.parallel import sharding as sh
@@ -26,15 +27,43 @@ class RescalePlan:
     note: str
 
 
-def plan_rescale(c: ModelConfig, shape: ShapeConfig, old_shape: tuple,
+def _as_placement(old: Union[Placement, dict, str, int, tuple]) -> Placement:
+    """Normalize the pre-failure mesh spelling. Bare tuples are the
+    legacy ``(data, model)`` mesh shape; everything else goes through
+    :meth:`Placement.of` so axes are named, not positional."""
+    if isinstance(old, tuple):
+        if len(old) == 1:
+            return Placement.of({"dp": old[0]})
+        if len(old) == 2:
+            return Placement.of({"dp": old[0], "tp": old[1]})
+        raise ValueError(
+            f"ambiguous bare mesh shape {old!r}; pass a Placement "
+            f"(e.g. {{'dp': 4, 'tp': 2}}) so axes are named")
+    return Placement.of(old)
+
+
+def plan_rescale(c: ModelConfig, shape: ShapeConfig,
+                 old_placement: Union[Placement, dict, str, int, tuple],
                  lost_devices: int) -> RescalePlan:
     """Shrink the data axis to the largest feasible size after losing
     ``lost_devices`` chips; keep the model axis (TP degree is a property
-    of the model fit, not of cluster health)."""
-    old_total = 1
-    for s in old_shape:
-        old_total *= s
-    model = old_shape[-1]
+    of the model fit, not of cluster health).
+
+    Only dp/tp placements are rescalable here: a pipeline (``pp``) or
+    pod axis changes the program, not just the shardings, so those are
+    rejected rather than silently mis-planned.
+    """
+    p = _as_placement(old_placement)
+    sizes = p.dict()
+    unsupported = sorted(a for a, n in sizes.items()
+                         if a not in ("dp", "tp") and n > 1)
+    if unsupported:
+        raise ValueError(
+            f"plan_rescale supports dp/tp placements only; cannot rescale "
+            f"axes {unsupported} of {p.label!r} (a pipeline/pod mesh needs "
+            f"a stage-aware plan, not a data-axis shrink)")
+    model = sizes.get("tp", 1)
+    old_total = p.n_devices
     avail = old_total - lost_devices
     new_data = avail // model
     # batch must stay divisible by the data axis
@@ -43,7 +72,7 @@ def plan_rescale(c: ModelConfig, shape: ShapeConfig, old_shape: tuple,
     if new_data < 1:
         raise ValueError("not enough devices for TP degree")
     return RescalePlan(
-        old_shape=tuple(old_shape),
+        old_shape=(sizes.get("dp", 1), model),
         new_shape=(new_data, model),
         new_axes=("data", "model"),
         global_batch=shape.global_batch,

@@ -83,30 +83,89 @@ class StragglerWatchdog:
         return max(self.var, 0.0) ** 0.5 / self.mean
 
 
-def run_attempts(name: str, fn: Callable[[], dict], retries: int,
-                 *, log_prefix: str = ""):
-    """Run ``fn`` up to ``retries`` times.
+#: exception types that retrying cannot fix: bad arguments/config, not
+#: transient runtime conditions. Fail fast so a typo'd sweep doesn't
+#: burn its retry budget per point.
+_FATAL_TYPES = (ValueError, TypeError, KeyError, AssertionError)
+#: transient-by-name: serve's CacheOOM is retryable but core must not
+#: import serve (layering), so classify by class name.
+_TRANSIENT_NAMES = ("CacheOOM",)
 
-    Returns ``(ok, metrics, attempts)``. Every failed attempt is logged
-    (message + traceback at debug level) so transient errors that a retry
-    papers over still leave a trace; on exhaustion the last exception is
-    summarized in the returned metrics.
+
+def classify_error(e: BaseException) -> bool:
+    """True if ``e`` is worth retrying. An explicit ``transient``
+    attribute (e.g. on injected faults) wins; then known-transient
+    names; then known-fatal types; everything else is retried (the
+    legacy default — an unknown crash may well be environmental)."""
+    t = getattr(e, "transient", None)
+    if t is not None:
+        return bool(t)
+    if type(e).__name__ in _TRANSIENT_NAMES:
+        return True
+    return not isinstance(e, _FATAL_TYPES)
+
+
+@dataclass
+class AttemptInfo:
+    """How an attempted step actually went: attempts used, total backoff
+    slept, and whether the final error was classified fatal."""
+    attempts: int = 1
+    backoff_s: float = 0.0
+    fatal: bool = False
+
+
+def run_attempts(name: str, fn: Callable[[], dict], retries: int,
+                 *, log_prefix: str = "",
+                 backoff_base: float = 0.0,
+                 backoff_factor: float = 2.0,
+                 backoff_max: float = 2.0,
+                 jitter: float = 0.25,
+                 seed: int = 0,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 classify: Callable[[BaseException], bool] = classify_error):
+    """Run ``fn`` up to ``retries`` times with exponential backoff.
+
+    Returns ``(ok, metrics, info)`` where ``info`` is an
+    :class:`AttemptInfo`. Errors the ``classify`` predicate calls fatal
+    (``ValueError`` and friends) fail fast — no further attempts;
+    transient ones (``CacheOOM``, injected faults) are retried after
+    ``min(backoff_max, backoff_base * backoff_factor**(k-1))`` seconds
+    scaled by ``1 + jitter*U[0,1)`` (seeded, so sweeps are
+    reproducible; ``backoff_base=0`` keeps the legacy no-sleep
+    behavior). Every failed attempt is logged (message + traceback at
+    debug level); on exhaustion the last exception is summarized in
+    the returned metrics.
     """
+    import random as _random
     last_err: Optional[BaseException] = None
     retries = max(retries, 1)
+    rng = _random.Random(seed)
+    info = AttemptInfo()
     for attempt in range(1, retries + 1):
+        info.attempts = attempt
         try:
-            return True, fn(), attempt
+            return True, fn(), info
         except Exception as e:  # noqa: BLE001 - benchmark must continue
             last_err = e
-            logger.warning("%sstep %r attempt %d/%d failed: %s: %s",
+            transient = classify(e)
+            logger.warning("%sstep %r attempt %d/%d failed (%s): %s: %s",
                            log_prefix, name, attempt, retries,
+                           "transient" if transient else "fatal",
                            type(e).__name__, e)
             logger.debug("%sstep %r attempt %d traceback:\n%s",
                          log_prefix, name, attempt,
                          traceback.format_exc())
+            if not transient:
+                info.fatal = True
+                break
+            if attempt < retries and backoff_base > 0.0:
+                delay = min(backoff_max,
+                            backoff_base * backoff_factor ** (attempt - 1))
+                delay *= 1.0 + jitter * rng.random()
+                sleep_fn(delay)
+                info.backoff_s += delay
     return False, {f"{name}_error":
-                   f"{type(last_err).__name__}: {last_err}"}, retries
+                   f"{type(last_err).__name__}: {last_err}"}, info
 
 
 class Runner:
@@ -154,10 +213,10 @@ class Runner:
                 metrics = step.fn(pt, context)
             return metrics
 
-        ok, metrics, attempts = run_attempts(
+        ok, metrics, info = run_attempts(
             step.name, attempt, step.retries,
             log_prefix=f"[{self.suite.name}] ")
-        metrics[f"{step.name}_attempts"] = attempts
+        metrics[f"{step.name}_attempts"] = info.attempts
         return ok, metrics
 
     def result_table(self) -> str:

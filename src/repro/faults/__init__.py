@@ -1,0 +1,24 @@
+"""Deterministic fault injection + recovery.
+
+``schedule``: seeded, hash-stamped fault schedules (crash, device loss,
+straggler slowdown, power-backend failure, checkpoint corruption) that
+train/serve/power hooks consult; ``supervisor``: bounded-restart
+auto-resume driver around the training loop. Faults are data, not
+monkeypatches — identical ``(preset, seed)`` reproduces the identical
+failure story, so resilience is benchmarkable like any other workload.
+"""
+from repro.faults.schedule import (  # noqa: F401
+    DeviceLoss,
+    FaultEvent,
+    FaultSchedule,
+    FlakyPower,
+    InjectedCrash,
+    InjectedFault,
+    SERVE_PRESETS,
+    TRAIN_PRESETS,
+    corrupt_checkpoint,
+)
+from repro.faults.supervisor import (  # noqa: F401
+    SupervisorResult,
+    run_supervised,
+)

@@ -35,6 +35,8 @@ from repro.configs.base import ShapeConfig
 from repro.core.manifest import write_manifest
 from repro.data.loader import ShardedLoader, lm_sample_fn
 from repro.data.synthetic import synthetic_tokens
+from repro.faults.schedule import FaultSchedule, TRAIN_PRESETS
+from repro.faults.supervisor import run_supervised
 from repro.launch.mesh import mesh_for
 from repro.models import lm
 from repro.parallel import sharding as shd
@@ -70,6 +72,41 @@ def make_data_iter(c, global_batch: int, seq_len: int, seed: int = 0,
     return gen()
 
 
+def make_data_fn(c, global_batch: int, seq_len: int, seed: int = 0,
+                 batch_put=None):
+    """Step-indexed data: ``data(step) -> batch``, the resume-safe form.
+
+    A fresh iterator restarts at sample 0 after a crash, silently
+    desyncing the data stream from the checkpointed step counter —
+    indexing by step keeps batch ``N`` identical whether the run reached
+    step ``N`` directly or through three crash/resume cycles, which is
+    what makes the resumed loss trace bit-equal to the uninterrupted
+    one. Same sample indexing as :func:`make_data_iter` (rank 0 of 1),
+    so the two forms produce identical batches at every step."""
+    toks = synthetic_tokens(4096, seq_len, c.vocab, seed=seed)
+
+    def sample(idx: int):
+        row = toks[idx % toks.shape[0]]
+        return {"tokens": row[:-1], "labels": row[1:]}
+
+    def data(step: int):
+        base = step * global_batch
+        samples = [sample(base + j) for j in range(global_batch)]
+        out = {"tokens": jnp.asarray(np.stack([s["tokens"]
+                                               for s in samples])),
+               "labels": jnp.asarray(np.stack([s["labels"]
+                                               for s in samples]))}
+        if c.family == "vlm":
+            out["patch_embeds"] = jnp.zeros(
+                (global_batch, c.n_patches, c.d_model), jnp.bfloat16)
+        if c.family == "encdec":
+            out["enc_frames"] = jnp.zeros(
+                (global_batch, c.enc_seq, c.d_model), jnp.bfloat16)
+        return batch_put(out) if batch_put is not None else out
+
+    return data
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-117m")
@@ -84,6 +121,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--fail-at-step", type=int, default=None,
                     help="inject a failure (fault-tolerance demo)")
+    ap.add_argument("--fault-preset", default=None, choices=TRAIN_PRESETS,
+                    help="seeded fault schedule; the run goes through the "
+                         "bounded-restart supervisor (faults.supervisor)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--max-restarts", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--placement", default="dp1",
                     help="device mesh, e.g. dp4 or dp2tp2 — the same "
@@ -109,9 +151,16 @@ def main(argv=None):
                    total_steps=args.steps)
     sc = StepConfig(microbatches=args.microbatches)
     key = jax.random.key(args.seed)
-    params = lm.init(key, c)
-    opt_state = opt_init(oc, params)
+    # state is rebuilt per supervisor attempt (the jitted step donates
+    # its input buffers, so crashed state cannot be reused), then the
+    # loop's auto-resume overwrites it from the checkpoint
+    def init_state():
+        p = lm.init(key, c)
+        return p, opt_init(oc, p)
+
+    params, opt_state = init_state()
     batch_put = None
+    build_state = init_state
     if placement.n_devices > 1:
         # same placement path as the bench workloads: Plan from the mesh,
         # table-driven param/ZeRO-1 shardings, batch over the data axes —
@@ -141,16 +190,40 @@ def main(argv=None):
             return jax.device_put(
                 batch, {k: shd.batch_sharding(plan, v.shape)
                         for k, v in batch.items()})
+
+        def build_state(p=psh, o=osh):
+            fresh_p, fresh_o = init_state()
+            return jax.device_put(fresh_p, p), jax.device_put(fresh_o, o)
     else:
         step = jax.jit(make_train_step(c, oc, sc), donate_argnums=(0, 1))
 
-    data = make_data_iter(c, args.global_batch, args.seq_len, args.seed,
-                          batch_put=batch_put)
+    data = make_data_fn(c, args.global_batch, args.seq_len, args.seed,
+                        batch_put=batch_put)
     cfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                      ckpt_dir=args.ckpt_dir, log_every=10,
                      seq_len=args.seq_len, global_batch=args.global_batch)
-    res = train_loop(step, params, opt_state, data, cfg,
-                     fail_at_step=args.fail_at_step)
+    if args.fault_preset and args.fault_preset != "none":
+        faults = FaultSchedule.from_preset(args.fault_preset,
+                                           args.fault_seed, args.steps)
+        print(f"[train] fault schedule {faults!r}")
+
+        def run_once(hook):
+            p, o = build_state()
+            return train_loop(step, p, o, data, cfg, hooks=[hook],
+                              faults=faults)
+
+        sup = run_supervised(run_once, ckpt_dir=args.ckpt_dir,
+                             max_restarts=args.max_restarts,
+                             seed=args.fault_seed)
+        res = sup.result
+        print(f"[train] supervised: restarts={sup.restarts} "
+              f"wasted_steps={sup.wasted_steps} "
+              f"recovery_s={sup.recovery_s:.3f} "
+              f"backoff_s={sup.backoff_s:.3f} "
+              f"ckpt_fallbacks={sup.ckpt_fallbacks}")
+    else:
+        res = train_loop(step, params, opt_state, data, cfg,
+                         fail_at_step=args.fail_at_step)
     print(f"[train] done: steps={res.steps_run} "
           f"first_loss={res.losses[0]:.4f} last_loss={res.losses[-1]:.4f} "
           f"tokens/s={res.tokens_per_s:,.0f} resumed_from={res.resumed_from}")

@@ -137,6 +137,63 @@ class TPUModelPower(PowerMethod):
         return {d: p for d in self.devices()}
 
 
+class FallbackPower(PowerMethod):
+    """Resilience wrapper: a primary backend whose ``read()`` failures
+    fall back to a second method instead of crashing (or silently
+    zeroing) the measurement.
+
+    Column stability: ``name``/``devices()`` are the PRIMARY's —
+    ``MeasuredScope`` builds its frame columns once at entry, so the
+    wrapper must look like the primary forever. Fallback readings are
+    remapped onto the primary's device names (total watts split evenly).
+    After ``max_failures`` consecutive primary failures the wrapper
+    stops poking the dead backend (``degraded``). ``label`` reports
+    ``"<primary>+fallback:<name>"`` once any fallback reading was used,
+    so records never pass modeled power off as measured.
+    """
+
+    def __init__(self, primary: PowerMethod, fallback: PowerMethod,
+                 max_failures: int = 3):
+        self.primary, self.fallback = primary, fallback
+        self.name = primary.name
+        self.max_failures = max(1, int(max_failures))
+        self.failures = 0           # consecutive primary read failures
+        self.fallback_reads = 0
+        self.degraded = False
+
+    @property
+    def label(self) -> str:
+        if self.fallback_reads:
+            return f"{self.primary.name}+fallback:{self.fallback.name}"
+        return self.primary.name
+
+    def devices(self):
+        return self.primary.devices()
+
+    def available(self) -> bool:
+        return self.primary.available() or self.fallback.available()
+
+    def _read_fallback(self) -> dict:
+        self.fallback_reads += 1
+        vals = self.fallback.read()
+        devs = self.primary.devices()
+        per = sum(vals.values()) / max(len(devs), 1)
+        return {d: per for d in devs}
+
+    def read(self) -> dict:
+        if self.degraded:
+            return self._read_fallback()
+        try:
+            out = self.primary.read()
+            self.failures = 0
+            return out
+        except Exception:  # noqa: BLE001 - a dead backend must not crash
+            self.failures += 1
+            if self.failures >= self.max_failures:
+                self.degraded = True
+            return self._read_fallback()
+
+
 METHODS = {"synthetic": SyntheticPower, "rapl": RaplPower,
            "tpu_model": TPUModelPower}
 

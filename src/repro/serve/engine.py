@@ -199,6 +199,8 @@ class ServeEngine:
         self.sched = sched
         self.chunk_tokens = int(chunk_tokens)
         self.preemptions = 0          # preempt events in the last serve()
+        self.shed = 0                 # requests shed in the last serve()
+        self.injected_faults = 0      # slot faults fired in the last serve()
         self.paged_impl, self.paged_interpret = paged_impl, paged_interpret
         self.impl_prefill = impl_prefill
         self.impl_decode, self.donate = impl_decode, donate
@@ -980,7 +982,8 @@ class ServeEngine:
               policy: str = "continuous",
               poll_s: float = 0.002,
               sched: Optional[str] = None,
-              chunk_tokens: Optional[int] = None) -> ServeRunResult:
+              chunk_tokens: Optional[int] = None,
+              faults=None) -> ServeRunResult:
         """Run a request set to completion under the given policy.
 
         Request ``arrival_s`` values are relative to run start; the
@@ -992,6 +995,17 @@ class ServeEngine:
         slices with decode steps and backs decode growth with
         preemption (see module docstring) — paged cache, model mode,
         attention-only families.
+
+        Degradation: requests carrying a ``deadline_s`` are SHED (zero
+        tokens, reason "shed") if still queued past their admission
+        deadline — the engine never hangs on hopeless work, and shed
+        requests count against goodput in ``serve.slo``. ``faults`` is
+        an optional seeded :class:`~repro.faults.schedule.FaultSchedule`:
+        its overload windows cap the admission queue (shedding newest
+        arrivals first — the oldest queued request is never shed), and
+        its slot faults kill the youngest decoding slot mid-run
+        (chunked mode only: the victim resumes via preemption replay,
+        so the faulted stream stays bit-identical to a fault-free one).
         """
         mode = sched or self.sched
         assert mode in ("phased", "chunked"), mode
@@ -1010,6 +1024,12 @@ class ServeEngine:
                 f"block_size {self.block_size}: chunk boundaries must "
                 f"land on block edges so suffix chunks can gather the "
                 f"already-prefilled prefix KV block-wise")
+        if faults is not None and any(
+                e.kind == "slot_fault" for e in faults.events):
+            assert chunked and not self._scripted, (
+                "slot faults recover via preemption replay, which only "
+                "the chunked+paged scheduler implements — phased prefill "
+                "cannot rebuild an emitted tail bit-identically")
         if not self._scripted:
             self._ensure_cache()
             if chunked:
@@ -1018,8 +1038,12 @@ class ServeEngine:
                     "via prefix_kv — attention-only families (a mamba "
                     "recurrence cannot restart at a block boundary)")
             self.preemptions = 0
+        self.shed = 0
+        self.injected_faults = 0
         sched = Scheduler(self.n_slots, self.max_len, policy=policy)
         watchdog = self.watchdog
+        has_deadlines = any(getattr(r, "deadline_s", None) is not None
+                            for r in requests)
 
         t_start = self.clock()
         results: dict[int, RequestResult] = {}
@@ -1037,8 +1061,27 @@ class ServeEngine:
             self.prefix_stats = self._blank_prefix_stats()
         self._sample_power(ts, ws)
 
+        def _mark_shed(req: Request):
+            res = results[req.rid]
+            res.finish_s = self.clock()
+            res.finish_reason = "shed"
+            self.shed += 1
+
+        poll = 0
         while sched.has_work:
             now_rel = self.clock() - t_start
+            # -- graceful degradation: deadline expiry + overload caps ----
+            if has_deadlines or faults is not None:
+                sched._absorb_arrivals(now_rel)
+                if has_deadlines:
+                    for req in sched.shed_expired(now_rel):
+                        _mark_shed(req)
+                cap = faults.queue_cap_at(poll) if faults is not None \
+                    else None
+                if cap is not None:
+                    for req in sched.shed_newest(cap):
+                        _mark_shed(req)
+            poll += 1
             # -- admission: prefill newly admitted requests ---------------
             # a headroom-deferred head retries only once free_blocks has
             # moved — not every loop iteration (re-admit/unadmit churn)
@@ -1080,6 +1123,17 @@ class ServeEngine:
                         res.finish_s, res.finish_reason = t1, reason
             # -- decode over all fully-prefilled slots --------------------
             active = sched.decode_slots()
+            if (faults is not None and active
+                    and faults.slot_fault_at(self._decode_idx)):
+                # injected slot failure: evict the YOUNGEST decoding slot
+                # (never the oldest — FIFO degradation). The victim
+                # re-queues at the front and resumes via decode replay,
+                # so its stream stays bit-identical to a fault-free run.
+                victim = max(active, key=lambda s: (s.request.arrival_s,
+                                                    s.request.rid))
+                self._preempt_slot(sched, victim, results)
+                self.injected_faults += 1
+                active = sched.decode_slots()
             prefilling = any(s.prefilling for s in sched.slots)
             if active and not self._scripted:
                 k = self._decode_plan(

@@ -33,6 +33,11 @@ class Request:
     arrival_s: float = 0.0
     eos_id: Optional[int] = None        # None -> run to max_new_tokens
     tenant: str = ""                    # multi-tenant traces (serve.traffic)
+    #: admission deadline, seconds after arrival: a request still queued
+    #: (never admitted) past it is SHED by the engine rather than served
+    #: hopelessly late — it finishes with reason "shed", zero tokens,
+    #: and counts against goodput. None disables the timeout.
+    deadline_s: Optional[float] = None
     #: True for a preemption-resume request (``Scheduler.preempt``): the
     #: prompt already contains previously-emitted tokens, so the engine
     #: must append its prefill token to the existing result stream
@@ -64,7 +69,7 @@ class RequestResult:
     admitted_s: float = 0.0             # slot admission (prefill start)
     first_token_s: float = 0.0          # end of prefill = first token
     finish_s: float = 0.0
-    finish_reason: str = ""             # "eos" | "length"
+    finish_reason: str = ""             # "eos" | "length" | "shed"
     slot: int = -1
     energy_wh: float = 0.0              # attributed by core.metrics
     tenant: str = ""                    # copied from the request

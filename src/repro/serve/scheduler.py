@@ -270,6 +270,42 @@ class Scheduler:
         self.queue.appendleft(resume)
         return resume
 
+    # -- graceful degradation (shedding) --------------------------------
+    def shed_expired(self, now: float) -> list[Request]:
+        """Remove queued requests whose admission deadline has passed
+        (``now - arrival_s > deadline_s``). Only never-admitted, fresh
+        requests are sheddable: a preemption-resume already received
+        service and must complete (FIFO-degradation invariant). Returns
+        the shed requests, queue order."""
+        if not self.queue:
+            return []
+        shed: list[Request] = []
+        kept: deque[Request] = deque()
+        for r in self.queue:
+            if (not r.resumed and r.deadline_s is not None
+                    and now - r.arrival_s > r.deadline_s):
+                shed.append(r)
+            else:
+                kept.append(r)
+        self.queue = kept
+        return shed
+
+    def shed_newest(self, cap: int) -> list[Request]:
+        """Overload response: pop queued requests from the BACK (newest
+        arrivals) until the queue fits ``cap``. The front of the queue —
+        the oldest request, and any preemption-resumes parked there — is
+        never shed, so under overload service degrades newest-first and
+        the oldest request always completes (PR 8's FIFO-degradation
+        invariant, extended to admission control). Returns the shed
+        requests, newest first."""
+        shed: list[Request] = []
+        floor = max(1, int(cap))
+        while len(self.queue) > floor:
+            if self.queue[-1].resumed:
+                break   # resumed work is never shed
+            shed.append(self.queue.pop())
+        return shed
+
     def unadmit(self, slot: Slot) -> Request:
         """Return a just-admitted (not yet prefilled) request to the
         FRONT of the queue and free its slot — the engine's admission-

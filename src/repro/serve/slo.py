@@ -36,6 +36,10 @@ class SLO:
     tpot_s: float
 
     def met_by(self, result) -> bool:
+        # a shed (or otherwise tokenless) request delivered nothing —
+        # it can never meet the SLO, whatever its timestamps say
+        if result.finish_reason == "shed" or result.n_tokens == 0:
+            return False
         return (result.ttft_s <= self.ttft_s
                 and result.tpot_s <= self.tpot_s)
 
@@ -82,8 +86,13 @@ def _slo_for(targets: SLOTargets, tenant: str, default: Optional[SLO]) -> SLO:
 
 
 def _report(results, met_flags, energy_wh: float) -> SLOReport:
-    ttfts = [r.ttft_s for r in results]
-    tpots = [r.tpot_s for r in results]
+    # latency quantiles cover SERVED requests only: a shed request has
+    # no first token, so its "TTFT" is a meaningless negative number
+    # that would drag the percentiles. It still counts in n_requests
+    # (and therefore against goodput) — shedding is not free.
+    served = [r for r in results if r.n_tokens > 0]
+    ttfts = [r.ttft_s for r in served]
+    tpots = [r.tpot_s for r in served]
     return SLOReport(
         n_requests=len(results),
         n_met=sum(met_flags),

@@ -11,9 +11,12 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
-from repro.ckpt.checkpoint import CheckpointManager, latest_step, restore
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   latest_valid_step, restore_resilient)
 from repro.core.metrics import tokens_per_s
 from repro.core.runner import StragglerWatchdog
+from repro.faults.schedule import (DeviceLoss, FaultSchedule, InjectedCrash,
+                                   corrupt_checkpoint)
 
 Params = Any
 
@@ -37,38 +40,61 @@ class LoopResult:
     tokens_per_s: float
     straggler_events: list
     resumed_from: Optional[int]
+    ckpt_skipped: list = field(default_factory=list)  # corrupt steps skipped
 
 
 def train_loop(train_step: Callable, params: Params, opt_state: Params,
                data_iter, cfg: LoopConfig, *,
                hooks: Optional[list[Callable]] = None,
-               fail_at_step: Optional[int] = None) -> LoopResult:
+               fail_at_step: Optional[int] = None,
+               faults: Optional[FaultSchedule] = None,
+               sleep_fn: Callable[[float], None] = time.sleep) -> LoopResult:
     """Run training with auto-resume + async checkpointing.
+
+    ``data_iter`` may be a plain iterator or a *step-indexed* callable
+    ``data(step) -> batch``; the callable form keeps the data stream
+    aligned with the step counter across crash/resume, which is what
+    makes a resumed run bit-identical to an uninterrupted one.
 
     ``fail_at_step`` injects a simulated failure (tests/fault-tolerance
     example): the loop raises after that step, and a rerun with the same
-    ckpt_dir resumes from the latest checkpoint.
+    ckpt_dir resumes from the latest checkpoint. ``faults`` is the
+    general form — a seeded :class:`FaultSchedule` whose crash-class
+    events (crash / device loss / checkpoint corruption) raise here and
+    whose slowdown events stretch the timed step (so the straggler
+    watchdog sees them). Resume goes through ``restore_resilient``:
+    corrupted checkpoints are skipped (recorded in ``ckpt_skipped``)
+    and the previous atomic step is used instead.
     """
     mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
         if cfg.ckpt_dir else None
     start_step = 0
     resumed_from = None
+    ckpt_skipped: list = []
     if mgr is not None and latest_step(cfg.ckpt_dir) is not None:
-        (params, opt_state), manifest = restore(
-            (params, opt_state), cfg.ckpt_dir)
-        start_step = manifest["step"]
-        resumed_from = start_step
+        if latest_valid_step(cfg.ckpt_dir) is not None:
+            (params, opt_state), manifest, ckpt_skipped = restore_resilient(
+                (params, opt_state), cfg.ckpt_dir)
+            start_step = manifest["step"]
+            resumed_from = start_step
+        # else: only corrupt checkpoints exist — start from scratch
 
+    get_batch = (data_iter if callable(data_iter)
+                 else lambda _step, it=iter(data_iter): next(it))
     watchdog = StragglerWatchdog()
     losses = []
     t_start = time.perf_counter()
     step = start_step
     n_run = 0
     for step in range(start_step, cfg.total_steps):
-        batch = next(data_iter)
+        batch = get_batch(step)
         t0 = time.perf_counter()
         params, opt_state, metrics = train_step(params, opt_state, batch)
         loss = float(metrics["loss"])
+        if faults is not None:
+            slow = faults.slowdown_s(step + 1)
+            if slow > 0:
+                sleep_fn(slow)  # inside the timed region: watchdog sees it
         dt = time.perf_counter() - t0
         watchdog.observe(step, dt)
         losses.append(loss)
@@ -85,11 +111,21 @@ def train_loop(train_step: Callable, params: Params, opt_state: Params,
         if fail_at_step is not None and step + 1 >= fail_at_step:
             if mgr is not None:
                 mgr.wait()
-            raise RuntimeError(f"injected failure at step {step + 1}")
+            raise InjectedCrash(step + 1)
+        if faults is not None:
+            ev = faults.crash_at(step + 1)
+            if ev is not None:
+                if mgr is not None:
+                    mgr.wait()  # the crash lands after any in-flight save
+                if ev.kind == "ckpt_corrupt" and cfg.ckpt_dir:
+                    corrupt_checkpoint(cfg.ckpt_dir)
+                if ev.kind == "device_loss":
+                    raise DeviceLoss(step + 1, ev.n)
+                raise InjectedCrash(step + 1)
     if mgr is not None:
         mgr.save_sync((params, opt_state), cfg.total_steps)
         mgr.wait()
     wall = time.perf_counter() - t_start
     tps = (n_run * cfg.global_batch * cfg.seq_len) / max(wall, 1e-9)
     return LoopResult(n_run, step + 1 if n_run else start_step, losses, tps,
-                      watchdog.events, resumed_from)
+                      watchdog.events, resumed_from, ckpt_skipped)

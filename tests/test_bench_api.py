@@ -170,11 +170,31 @@ def test_workload_runner_retries_are_counted_and_logged(tmp_path, caplog):
     assert "transient glitch" in caplog.text   # retried failure is visible
 
 
-def test_workload_runner_records_error_after_exhausted_retries(tmp_path):
+def test_workload_runner_fails_fast_on_fatal_error(tmp_path):
+    # a ValueError is a deterministic bug, not a transient: retrying it
+    # would burn the retry budget reproducing the same crash
+    calls = []
+
     def broken_build(pt, ctx):
-        return {"run": lambda: (_ for _ in ()).throw(ValueError("boom"))}
+        def run():
+            calls.append(1)
+            raise ValueError("boom")
+        return {"run": run}
 
     spec = _toy_spec("toy_broken", build=broken_build)
+    recs = WorkloadRunner(spec, out_dir=str(tmp_path), power="none",
+                          retries=2).run(verbose=False)
+    assert all(r.status == "error" and "boom" in r.error for r in recs)
+    assert all(r.attempts == 1 for r in recs)
+    assert len(calls) == len(recs)     # exactly one attempt per point
+
+
+def test_workload_runner_records_error_after_exhausted_retries(tmp_path):
+    def broken_build(pt, ctx):
+        return {"run": lambda: (_ for _ in ()).throw(
+            RuntimeError("boom transient"))}
+
+    spec = _toy_spec("toy_broken2", build=broken_build)
     recs = WorkloadRunner(spec, out_dir=str(tmp_path), power="none",
                           retries=2).run(verbose=False)
     assert all(r.status == "error" and "boom" in r.error for r in recs)

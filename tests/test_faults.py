@@ -1,0 +1,471 @@
+"""Fault injection + recovery: schedule determinism, checkpoint
+durability (crash-mid-save atomicity, digest fallback), the bounded
+supervisor, elastic rescale inputs, serve degradation, and the
+transient/fatal retry classifier."""
+import numpy as np
+import pytest
+
+import repro.ckpt.checkpoint as ckpt
+from repro.bench.spec import Placement
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   latest_valid_step, restore_resilient,
+                                   save, verify_step)
+from repro.ckpt.elastic import plan_rescale
+from repro.configs import SHAPES, get_config
+from repro.core.runner import AttemptInfo, classify_error, run_attempts
+from repro.faults.schedule import (DeviceLoss, FaultEvent, FaultSchedule,
+                                   FlakyPower, InjectedCrash,
+                                   corrupt_checkpoint)
+from repro.faults.supervisor import run_supervised
+from repro.power.methods import FallbackPower, SyntheticPower
+from repro.serve.engine import ServeEngine
+from repro.serve.requests import Request
+from repro.serve.slo import SLO, evaluate_slo
+
+
+# ---------------------------------------------------------------------------
+# fault schedules
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_bit_reproducible_and_hashed():
+    a = FaultSchedule.from_preset("crash_mid", seed=7, total_steps=40)
+    b = FaultSchedule.from_preset("crash_mid", seed=7, total_steps=40)
+    assert a.events == b.events
+    assert a.schedule_hash == b.schedule_hash
+    # the hash covers (preset, seed, total_steps, events): any change
+    # to the failure story changes the stamp
+    c = FaultSchedule.from_preset("crash_mid", seed=8, total_steps=40)
+    assert c.schedule_hash != a.schedule_hash
+    assert FaultSchedule.from_preset("none", seed=7).events == ()
+
+    with pytest.raises(ValueError, match="unknown fault preset"):
+        FaultSchedule.from_preset("meteor_strike")
+
+
+def test_crash_events_fire_once_per_schedule():
+    s = FaultSchedule.from_preset("crash_mid", seed=0, total_steps=30)
+    at = s.events[0].at
+    assert s.crash_at(at - 1) is None
+    ev = s.crash_at(at)
+    assert ev is not None and ev.kind == "crash"
+    # the supervisor shares the schedule across restarts: the resumed
+    # attempt walks past the same step without re-crashing
+    assert s.crash_at(at) is None
+    assert s.crash_at(s.total_steps) is None
+
+
+def test_crash_at_catches_skipped_steps():
+    """A resume that lands past the scheduled step still fires it."""
+    s = FaultSchedule(
+        "crash_mid", 0, 30, (FaultEvent("crash", at=10),))
+    assert s.crash_at(15) is not None   # e.at <= step
+
+
+def test_slowdown_and_overload_queries():
+    s = FaultSchedule(
+        "flaky", 0, 20,
+        (FaultEvent("slowdown", at=5, seconds=0.02, span=2),
+         FaultEvent("overload", at=3, n=2, span=4)))
+    assert s.slowdown_s(4) == 0.0
+    assert s.slowdown_s(5) == pytest.approx(0.02)
+    assert s.slowdown_s(6) == pytest.approx(0.02)
+    assert s.slowdown_s(7) == 0.0
+    assert s.queue_cap_at(2) is None
+    assert s.queue_cap_at(3) == 2
+    assert s.queue_cap_at(6) == 2
+    assert s.queue_cap_at(7) is None
+
+
+# ---------------------------------------------------------------------------
+# checkpoint durability
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 8)).astype(np.float32),
+            "nested": {"b": np.arange(10, dtype=np.int32),
+                       "s": np.float32(1.5 + seed)}}
+
+
+def test_crash_mid_save_keeps_previous_step(tmp_path, monkeypatch):
+    """Kill the writer between the tmp dir and the atomic publish: the
+    previous step must stay the latest (valid) checkpoint."""
+    save(_tree(1), tmp_path, step=1)
+
+    def boom(src, dst):
+        raise OSError("simulated crash mid-publish")
+
+    monkeypatch.setattr(ckpt.os, "replace", boom)
+    with pytest.raises(OSError, match="mid-publish"):
+        save(_tree(2), tmp_path, step=2)
+    monkeypatch.undo()
+    assert latest_step(tmp_path) == 1
+    assert latest_valid_step(tmp_path) == 1
+    got, manifest, skipped = restore_resilient(_tree(), tmp_path)
+    assert manifest["step"] == 1 and skipped == []
+    np.testing.assert_array_equal(got["w"], _tree(1)["w"])
+
+
+def test_async_save_failure_reraised_at_wait(tmp_path, monkeypatch):
+    mgr = CheckpointManager(tmp_path)
+    monkeypatch.setattr(ckpt, "save",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            OSError("disk full")))
+    mgr.save_async(_tree(), 1)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    # the exception is consumed once surfaced; the manager is reusable
+    monkeypatch.undo()
+    mgr.save_async(_tree(), 2)
+    mgr.wait()
+    assert latest_step(tmp_path) == 2
+
+
+def test_corrupt_checkpoint_detected_and_skipped(tmp_path):
+    save(_tree(2), tmp_path, step=2)
+    save(_tree(4), tmp_path, step=4)
+    assert corrupt_checkpoint(tmp_path) == 4
+    assert latest_step(tmp_path) == 4           # naive view: still newest
+    assert not verify_step(tmp_path, 4)         # digest catches the flip
+    assert latest_valid_step(tmp_path) == 2
+    got, manifest, skipped = restore_resilient(_tree(), tmp_path)
+    assert manifest["step"] == 2 and skipped == [4]
+    np.testing.assert_array_equal(got["w"], _tree(2)["w"])
+
+
+def test_restore_resilient_raises_when_nothing_valid(tmp_path):
+    save(_tree(), tmp_path, step=3)
+    corrupt_checkpoint(tmp_path, step=3)
+    assert latest_valid_step(tmp_path) is None
+    with pytest.raises(FileNotFoundError, match=r"corrupted: \[3\]"):
+        restore_resilient(_tree(), tmp_path)
+
+
+def test_restore_onto_smaller_mesh_numeric_equality(tmp_path, subproc):
+    """A checkpoint written under a dp8 mesh restores bit-equal under a
+    dp2 mesh (elastic restart: restore() reshards via device_put)."""
+    out = subproc(f"""
+    import jax, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.ckpt.checkpoint import save, restore
+
+    devs = jax.devices()
+    x = np.arange(64, dtype=np.float32).reshape(8, 8)
+    big = Mesh(np.array(devs[:8]), ("data",))
+    xs = jax.device_put(x, NamedSharding(big, P("data", None)))
+    save({{"x": xs}}, {str(tmp_path)!r}, step=1)
+
+    small = Mesh(np.array(devs[:2]), ("data",))
+    sh = {{"x": NamedSharding(small, P("data", None))}}
+    got, manifest = restore({{"x": x}}, {str(tmp_path)!r}, shardings=sh)
+    assert manifest["step"] == 1
+    assert got["x"].sharding.mesh.shape["data"] == 2
+    np.testing.assert_array_equal(np.asarray(got["x"]), x)
+    print("RESHARD_OK")
+    """, n_devices=8)
+    assert "RESHARD_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_supervisor_resumes_and_prices_recovery(tmp_path):
+    save(_tree(), tmp_path, step=4)
+    clock = _FakeClock()
+    sleeps = []
+    calls = {"n": 0}
+
+    def run_once(hook):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            clock.t += 1.0
+            raise InjectedCrash(6)     # crashed at step 6, ckpt at 4
+        clock.t += 0.5                 # time to rebuild + reach a step
+        hook(4, {}, 0.0)
+        return "done"
+
+    out = run_supervised(run_once, ckpt_dir=tmp_path, seed=0,
+                         sleep_fn=sleeps.append, clock=clock)
+    assert out.result == "done"
+    assert out.restarts == 1
+    assert out.crash_steps == [6] and out.resume_steps == [4]
+    assert out.wasted_steps == 2       # steps 5..6 recomputed
+    assert out.ckpt_fallbacks == 0
+    # the fake sleep doesn't advance the fake clock, so recovery_s here
+    # is purely the rebuild-to-first-step time (real runs include backoff)
+    assert out.recovery_s == pytest.approx(0.5)
+    assert out.backoff_s == pytest.approx(sum(sleeps))
+
+
+def test_supervisor_bounded_restarts_reraise():
+    sleeps = []
+
+    def always_crash(hook):
+        raise InjectedCrash(3)
+
+    with pytest.raises(InjectedCrash):
+        run_supervised(always_crash, ckpt_dir=None, max_restarts=2,
+                       seed=0, sleep_fn=sleeps.append,
+                       clock=_FakeClock())
+    # 2 restarts slept; the 3rd crash re-raises without sleeping.
+    # Exponential envelope: delay_k in base*factor**(k-1) * [1, 1+jitter]
+    assert len(sleeps) == 2
+    assert 0.05 <= sleeps[0] <= 0.05 * 1.25
+    assert 0.10 <= sleeps[1] <= 0.10 * 1.25
+
+
+def test_supervisor_counts_ckpt_fallback_and_rescale(tmp_path):
+    save(_tree(2), tmp_path, step=2)
+    save(_tree(5), tmp_path, step=5)
+    corrupt_checkpoint(tmp_path, step=5)
+    losses = []
+    calls = {"n": 0}
+
+    def run_once(hook):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise DeviceLoss(6, 2)
+        return "done"
+
+    out = run_supervised(run_once, ckpt_dir=tmp_path, seed=0,
+                         sleep_fn=lambda s: None, clock=_FakeClock(),
+                         on_device_loss=losses.append)
+    assert out.result == "done"
+    assert out.resume_steps == [2]     # step 5 failed its digest
+    assert out.ckpt_fallbacks == 1
+    assert out.wasted_steps == 4       # crashed at 6, resumed from 2
+    assert out.rescales == 1 and losses[0].n_lost == 2
+
+
+# ---------------------------------------------------------------------------
+# elastic rescale planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rescale_accepts_placement():
+    c = get_config("granite-8b")
+    shape = SHAPES["train_4k"]
+    from_tuple = plan_rescale(c, shape, (16, 16), lost_devices=32)
+    from_placement = plan_rescale(c, shape,
+                                  Placement.of({"dp": 16, "tp": 16}),
+                                  lost_devices=32)
+    assert from_tuple == from_placement
+    assert from_placement.old_shape == (16, 16)
+    assert from_placement.new_shape[1] == 16    # TP degree preserved
+    # data axis shrank to the largest batch-divisible size <= 14
+    assert from_placement.new_shape[0] <= 14
+    assert shape.global_batch % from_placement.new_shape[0] == 0
+
+
+def test_plan_rescale_rejects_pipeline_axes():
+    c = get_config("granite-8b")
+    with pytest.raises(ValueError, match="dp/tp placements only"):
+        plan_rescale(c, SHAPES["train_4k"],
+                     Placement.of({"dp": 8, "tp": 4, "pp": 2}),
+                     lost_devices=8)
+    with pytest.raises(ValueError, match="ambiguous bare mesh shape"):
+        plan_rescale(c, SHAPES["train_4k"], (4, 4, 2), lost_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# serve degradation
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _engine(n_slots=1, decode_dt=0.1):
+    clock = _Clock()
+
+    def prefill(slot, prompt):
+        clock.advance(0.05)
+        return 1
+
+    def decode(tokens, positions, active):
+        clock.advance(decode_dt)
+        return np.asarray(tokens) + 1
+
+    eng = ServeEngine(n_slots=n_slots, max_len=64, prefill_fn=prefill,
+                      decode_fn=decode, clock=clock,
+                      sleep_fn=clock.advance)
+    return eng, clock
+
+
+def _req(rid, budget=3, arrival=0.0, deadline=None):
+    return Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
+                   max_new_tokens=budget, arrival_s=arrival,
+                   deadline_s=deadline)
+
+
+def _overload_schedule(cap, span=10_000):
+    return FaultSchedule("overload", 0, 0,
+                         (FaultEvent("overload", at=0, n=cap, span=span),))
+
+
+def test_overload_sheds_newest_first_oldest_completes():
+    eng, _ = _engine(n_slots=1)
+    reqs = [_req(rid) for rid in range(5)]
+    res = eng.serve(reqs, faults=_overload_schedule(cap=2))
+    by = {r.rid: r for r in res.results}
+    # FIFO degradation: the cap evicts from the queue TAIL — the oldest
+    # waiting request is never the one shed
+    assert by[0].finish_reason != "shed" and by[0].n_tokens > 0
+    # cap=2 keeps the two OLDEST queued requests; rids 2-4 (the newest
+    # arrivals) are shed, rids 0-1 both complete
+    shed = sorted(r.rid for r in res.results if r.finish_reason == "shed")
+    assert shed == [2, 3, 4]
+    assert by[1].n_tokens > 0
+    assert eng.shed == 3
+
+
+def test_overload_shed_is_deterministic():
+    outs = []
+    for _ in range(2):
+        eng, _ = _engine(n_slots=1)
+        res = eng.serve([_req(rid) for rid in range(6)],
+                        faults=_overload_schedule(cap=3))
+        outs.append(tuple(sorted(
+            (r.rid, r.finish_reason, r.n_tokens) for r in res.results)))
+    assert outs[0] == outs[1]
+
+
+def test_deadline_expiry_sheds_queued_request():
+    eng, _ = _engine(n_slots=1, decode_dt=0.2)
+    # rid 0 monopolizes the only slot for ~20 decode steps; rid 1's
+    # admission deadline expires while it waits in the queue
+    res = eng.serve([_req(0, budget=20),
+                     _req(1, budget=2, deadline=0.5)])
+    by = {r.rid: r for r in res.results}
+    assert by[0].n_tokens == 20
+    assert by[1].finish_reason == "shed" and by[1].n_tokens == 0
+
+
+def test_slo_counts_shed_against_goodput():
+    eng, _ = _engine(n_slots=1, decode_dt=0.2)
+    res = eng.serve([_req(0, budget=20),
+                     _req(1, budget=2, deadline=0.5)])
+    report = evaluate_slo(res.results, SLO(ttft_s=100.0, tpot_s=100.0))
+    assert report.n_requests == 2
+    assert report.n_met == 1               # the shed request never meets
+    assert report.goodput == pytest.approx(0.5)
+    assert report.ttft_p99_s < 100.0       # quantiles over served only
+
+
+# ---------------------------------------------------------------------------
+# power-backend resilience
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_power_degrades_with_labeled_source():
+    primary = FlakyPower(SyntheticPower(n_devices=2, base=100.0),
+                         fail_from=0, fail_count=100)
+    fb = FallbackPower(primary, SyntheticPower(n_devices=1, base=50.0),
+                       max_failures=3)
+    assert fb.label == primary.name        # untouched until a fallback read
+    for i in range(4):
+        out = fb.read()                    # never raises
+        assert set(out) == set(primary.devices())
+        assert sum(out.values()) == pytest.approx(50.0)
+    assert fb.degraded and fb.fallback_reads == 4
+    assert fb.label.endswith("+fallback:synthetic")
+
+
+def test_fallback_power_recovers_primary():
+    primary = FlakyPower(SyntheticPower(n_devices=1, base=100.0),
+                         fail_from=0, fail_count=2)
+    fb = FallbackPower(primary, SyntheticPower(n_devices=1, base=50.0),
+                       max_failures=3)
+    assert sum(fb.read().values()) == pytest.approx(50.0)   # fail 1
+    assert sum(fb.read().values()) == pytest.approx(50.0)   # fail 2
+    assert sum(fb.read().values()) == pytest.approx(100.0)  # primary back
+    assert not fb.degraded and fb.failures == 0
+
+
+def test_flaky_power_window():
+    p = FlakyPower(SyntheticPower(n_devices=1, base=10.0),
+                   fail_from=1, fail_count=2)
+    p.read()
+    with pytest.raises(OSError, match="injected power-backend"):
+        p.read()
+    with pytest.raises(OSError):
+        p.read()
+    assert sum(p.read().values()) == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# retry classification + backoff
+# ---------------------------------------------------------------------------
+
+
+def test_classify_error_policy():
+    assert not classify_error(ValueError("bad config"))
+    assert not classify_error(AssertionError())
+    assert classify_error(RuntimeError("env hiccup"))
+    assert classify_error(InjectedCrash(3))        # transient attr wins
+
+    class CacheOOM(Exception):
+        pass
+
+    assert classify_error(CacheOOM())              # transient by name
+
+    class KnownBad(ValueError):
+        transient = True                           # attr beats the type
+
+    assert classify_error(KnownBad())
+
+
+def test_run_attempts_fails_fast_on_fatal():
+    calls = []
+
+    def fatal():
+        calls.append(1)
+        raise ValueError("typo'd sweep")
+
+    ok, metrics, info = run_attempts("pt", fatal, retries=5,
+                                     sleep_fn=lambda s: None)
+    assert not ok and len(calls) == 1
+    assert isinstance(info, AttemptInfo)
+    assert info.attempts == 1 and info.fatal
+    assert "typo'd sweep" in metrics["pt_error"]
+
+
+def test_run_attempts_backoff_schedule():
+    sleeps = []
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return {"v": 1}
+
+    ok, metrics, info = run_attempts("pt", flaky, retries=5,
+                                     backoff_base=0.05, seed=0,
+                                     sleep_fn=sleeps.append)
+    assert ok and metrics == {"v": 1}
+    assert info.attempts == 3 and not info.fatal
+    assert info.backoff_s == pytest.approx(sum(sleeps))
+    assert len(sleeps) == 2
+    assert 0.05 <= sleeps[0] <= 0.05 * 1.25
+    assert 0.10 <= sleeps[1] <= 0.10 * 1.25
