@@ -42,7 +42,8 @@ bench-compare:   ## fresh smoke run gated against the committed baselines
 	$(PY) -m repro.bench compare $(BASELINES) artifacts/ci-bench \
 	    --fail-on-regression --fail-on-missing
 
-WORKLOADS ?= serve llm_train kernels serve_slo resilience
+WORKLOADS ?= serve llm_train kernels serve_slo resilience heatmap \
+             pipeline_gpt resnet50 roofline
 LABEL ?= local run
 
 # promotion REPLACES the baseline store, so the old->new compare is

@@ -44,6 +44,8 @@ TRAJECTORY_METRICS = ("decode_tok_s", "tokens_per_s", "images_per_s",
                       "wh_per_token", "occupancy", "speedup_vs_fixed",
                       "speedup_vs_slotted", "tok_s_per_device",
                       "scaling_efficiency", "wh_per_token_scaling",
+                      "speedup_vs_fp_kv", "kv_stream_prefix_agreement",
+                      "max_concurrency",
                       "us", "ms", "goodput", "ttft_p99", "tpot_p99",
                       "wh_per_slo_request", "goodput_tokens_per_s",
                       "recovery_s", "wasted_tokens",

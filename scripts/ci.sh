@@ -105,11 +105,13 @@ EOF
 #     Pinned to sched=phased: the sched axis would double the (slow)
 #     interpret cell count, and chunked decode runs the exact same
 #     paged-attention program (tests/test_chunked_serve.py covers the
-#     chunked paths at full fidelity).
+#     chunked paths at full fidelity). Pinned to kv_dtype=fp32 for the
+#     same reason — the int8 interpret coverage lives in the kernels
+#     smoke cases (paged_prefill_int8) and tests/test_int8_kv.py.
 rm -rf artifacts/ci-paged-kernel
 REPRO_PAGED_IMPL=pallas-interpret python -m repro.bench run --suite serve \
-    --points cache=paged,policy=continuous,sched=phased --tags smoke \
-    --power synthetic --out artifacts/ci-paged-kernel
+    --points cache=paged,policy=continuous,sched=phased,kv_dtype=fp32 \
+    --tags smoke --power synthetic --out artifacts/ci-paged-kernel
 
 # 3d. TTFT-cliff gate (ISSUE 8 acceptance): on the tight-pool
 #     long_prefill trace, the chunked scheduler must hold its median
@@ -161,6 +163,81 @@ print(f"resilience gate: restarts={m['restarts']} "
       f"wasted_tokens={m['wasted_tokens']}<={bound} "
       f"recovery_s={m['recovery_s']:.3f} loss_bitmatch=1 "
       f"wh_overhead={m['wh_overhead_resilience']:.4f}")
+EOF
+
+# 3f. Paged prefill-attention kernel drill (ISSUE 10): one serve_slo
+#     cell whose shared-prefix hits route every suffix prefill through
+#     the Pallas paged-prefill kernel in interpret mode
+#     (engine._prefix_prefill_fn -> lm.prefill(paged_prefix=...) ->
+#     kernels.prefill_attention). Correctness-drill only, like 3c: the
+#     run proves the scalar-prefetch block-table walk executes end to
+#     end on this host; oracle bit-exactness is pytest's job
+#     (tests/test_prefill_kernel.py, tests/test_prefix_cache.py).
+rm -rf artifacts/ci-prefill-kernel
+REPRO_PAGED_IMPL=pallas-interpret python -m repro.bench run \
+    --suite serve_slo \
+    --points trace=shared_prefix,cache=paged+prefix,sched=phased,kv_dtype=fp32 \
+    --tags smoke --power synthetic --out artifacts/ci-prefill-kernel
+python - <<'EOF'
+import json, sys
+recs = json.load(
+    open("artifacts/ci-prefill-kernel/serve_slo/results.json"))["records"]
+ok = [r for r in recs if r["status"] == "ok"]
+if not ok:
+    sys.exit("paged-prefill kernel drill produced no ok cell")
+hits = ok[0]["metrics"].get("prefix_hit_requests", 0)
+if hits <= 0:
+    sys.exit("paged-prefill kernel drill never hit the prefix index — "
+             "the Pallas prefill path was not exercised")
+print(f"paged-prefill kernel drill: {hits} prefix-hit requests through "
+      f"the interpret-mode kernel")
+EOF
+
+# 3g. int8 KV-block gate (ISSUE 10 acceptance): every paged continuous
+#     fp32/int8 twin pair in the smoke run must show (a) the quantized
+#     pool at <= 0.55x the fp32 bytes for the SAME block count (int8
+#     blocks + f32 per-block-per-head scales against bf16 blocks —
+#     measured 0.508), (b) max_concurrency at least doubled at the fp
+#     byte budget, (c) energy per token no worse than ~parity (measured
+#     ratio 0.92; the 1.10 ceiling only absorbs single-run CPU wobble,
+#     a real int8-path slowdown lands far above it), and (d) greedy
+#     token streams tracking the fp32 twin's (mean longest-common-prefix
+#     fraction >= 0.70; measured 0.85 — quantization flips some argmax
+#     ties mid-stream, but a kernel/scale bug collapses agreement toward
+#     0 because streams diverge at the first token).
+python - <<'EOF'
+import json, sys
+recs = json.load(open("artifacts/ci-bench/serve/results.json"))["records"]
+cells = {}
+for r in recs:
+    p = r["point"]
+    if (r["status"] == "ok" and p.get("cache") == "paged"
+            and p.get("policy") == "continuous"):
+        key = (p["slots"], p["rate_hz"], p["sched"])
+        cells.setdefault(key, {})[p["kv_dtype"]] = r["metrics"]
+pairs = {k: v for k, v in cells.items() if "fp32" in v and "int8" in v}
+if not pairs:
+    sys.exit(f"no fp32/int8 paged-continuous twin cells: {sorted(cells)}")
+for key, v in sorted(pairs.items()):
+    fp, i8 = v["fp32"], v["int8"]
+    pool = i8["pool_bytes"] / max(fp["pool_bytes"], 1)
+    if pool > 0.55:
+        sys.exit(f"{key}: int8 pool_bytes ratio {pool:.3f} > 0.55")
+    if i8["max_concurrency"] < 2 * fp["max_concurrency"]:
+        sys.exit(f"{key}: int8 max_concurrency {i8['max_concurrency']} "
+                 f"< 2x fp32 {fp['max_concurrency']}")
+    wh = i8["wh_per_token"] / max(fp["wh_per_token"], 1e-12)
+    if wh > 1.10:
+        sys.exit(f"{key}: int8 wh_per_token ratio {wh:.3f} > 1.10")
+    agree = i8.get("kv_stream_prefix_agreement")
+    if agree is None or agree < 0.70:
+        sys.exit(f"{key}: kv_stream_prefix_agreement {agree} < 0.70")
+    if "speedup_vs_fp_kv" not in i8:
+        sys.exit(f"{key}: int8 cell missing speedup_vs_fp_kv")
+    print(f"int8 gate {key}: pool={pool:.3f} "
+          f"conc={fp['max_concurrency']}->{i8['max_concurrency']} "
+          f"wh_ratio={wh:.3f} agree={agree:.3f} "
+          f"speedup={i8['speedup_vs_fp_kv']:.3f}")
 EOF
 
 # 4. Regression gate: the smoke run just produced must not be slower or

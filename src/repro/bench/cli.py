@@ -33,6 +33,7 @@ import subprocess
 import sys
 from typing import Optional, Sequence
 
+from repro.bench import envtune
 from repro.bench import workloads  # noqa: F401 - populates the registry
 from repro.bench.compare import (
     MISSING, NOISE_K, POWER_MISMATCH, compare_sets, load_result_set,
@@ -93,30 +94,40 @@ def _select(args) -> list:
 
 
 def ensure_devices(needed: int, argv: Sequence[str]) -> Optional[int]:
-    """Make >= ``needed`` jax devices available to this run.
+    """Make >= ``needed`` jax devices available to this run, with any
+    opt-in environment tuning (``envtune``: tcmalloc preload, XLA step
+    marker) applied.
 
     Returns None when the current process can proceed; otherwise re-execs
     the CLI once with the host platform device count forced via XLA_FLAGS
-    (set before jax initializes in the child) and returns its exit code.
+    and/or the tuned environment prepared (both must land before the
+    dynamic loader / jax backend init in the child) and returns its exit
+    code.
     """
-    if needed <= 1:
+    tuning = envtune.pending()
+    if needed <= 1 and not tuning:
         return None
     import jax
-    try:
-        # newer jax: in-process host-platform config (pre-backend-init)
-        jax.config.update("jax_num_cpu_devices", needed)
-    except Exception:  # noqa: BLE001 - option missing or backend is up
-        pass
-    if jax.device_count() >= needed:
+    if needed > 1:
+        try:
+            # newer jax: in-process host-platform config (pre-backend-init)
+            jax.config.update("jax_num_cpu_devices", needed)
+        except Exception:  # noqa: BLE001 - option missing or backend is up
+            pass
+    if jax.device_count() >= needed and not tuning:
         return None
     if os.environ.get(_REEXEC_MARKER):
+        if jax.device_count() >= needed:
+            return None   # tuning was applied by the exec that got us here
         raise SystemExit(
             f"error: {needed} devices required but only "
             f"{jax.device_count()} available even after forcing "
             f"the host platform device count")
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + f" {_FORCE_FLAG}={needed}").strip()
+    if jax.device_count() < needed:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" {_FORCE_FLAG}={needed}").strip()
+    env = envtune.apply(env) if tuning else env
     env[_REEXEC_MARKER] = "1"
     # the child must find repro even when the parent got it via sys.path
     src_dir = str(pathlib.Path(__file__).resolve().parents[2])

@@ -92,6 +92,17 @@ COMPARED_METRICS: dict[str, tuple[bool, float]] = {
     "ttft_p99": (False, 0.35),
     "tpot_p99": (False, 0.35),
     "wh_per_slo_request": (False, 0.30),
+    # int8 KV pool (kv_dtype axis): pool_bytes/max_concurrency are
+    # structural (deterministic functions of config + dtype — near-zero
+    # tolerance so a silent layout change gates); speedup_vs_fp_kv is a
+    # same-cell throughput ratio vs the fp32 twin;
+    # kv_stream_prefix_agreement is the token-stream quality figure
+    # (mean longest-common-prefix fraction vs the fp32 twin's streams) —
+    # a drop means quantization error is steering greedy decoding.
+    "pool_bytes": (False, 0.01),
+    "max_concurrency": (True, 0.01),
+    "speedup_vs_fp_kv": (True, 0.25),
+    "kv_stream_prefix_agreement": (True, 0.10),
     # chunked-vs-phased scheduler ratios (sched axis): same-cell pairs,
     # so trace noise largely cancels — except ttft_p99_vs_phased, a
     # ratio of two SINGLE-RUN p99s whose run-to-run wobble is multiples,

@@ -28,6 +28,7 @@ import re
 import time
 from typing import Optional, Sequence
 
+from repro.bench import envtune
 from repro.bench.context import RunContext
 from repro.bench.records import (
     ResultRecord, save_records, stamp_scaling_metrics,
@@ -201,6 +202,12 @@ class WorkloadRunner:
             rec.metrics.update(metrics or {})
         if backoff_total > 0.0 or rec.attempts > 1:
             rec.metrics["retry_backoff_s"] = round(backoff_total, 6)
+        # environment-tuning provenance (tcmalloc preload / XLA step
+        # marker): a tuned run must never silently compare against an
+        # untuned baseline as if only the code changed
+        tuning = envtune.active()
+        if tuning:
+            rec.metrics["env_tuning"] = tuning
         dt = time.perf_counter() - t0
         if self.watchdog.observe(len(self.records), dt):
             rec.metrics["straggler"] = True

@@ -21,6 +21,12 @@ FLASH_SHAPES = {
     "flash_b2_s512": (2, 512, 8, 8, 64),
 }
 
+#: paged prefill case: a 32-token chunk against 3 prefix pool blocks
+#: per row (GQA 4q/2kv) — the serve chunked/suffix-prefill hot path
+#: shape, scaled for interpret mode
+PAGED_PREFILL_SHAPE = {"b": 2, "sq": 32, "h": 4, "kh": 2, "dh": 16,
+                       "bs": 16, "npre": 3, "n_blocks": 8}
+
 
 def _flash_inputs(case: str):
     b, s, h, kh, dh = FLASH_SHAPES[case]
@@ -31,14 +37,44 @@ def _flash_inputs(case: str):
     return q, k, v
 
 
+def _paged_prefill_inputs(quantized: bool):
+    """(q, k_suffix, v_suffix, k_pool, v_pool, tables, k_scale, v_scale)
+    with shuffled non-trivial block tables (block 0 left unused, like
+    the serve pool's trash block)."""
+    p = PAGED_PREFILL_SHAPE
+    b, sq, h, kh, dh = p["b"], p["sq"], p["h"], p["kh"], p["dh"]
+    bs, npre, nblk = p["bs"], p["npre"], p["n_blocks"]
+    ks = jax.random.split(jax.random.key(1), 6)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32)
+    k_suf = jax.random.normal(ks[1], (b, sq, kh, dh), jnp.float32)
+    v_suf = jax.random.normal(ks[2], (b, sq, kh, dh), jnp.float32)
+    k_pool = jax.random.normal(ks[3], (nblk, bs, kh, dh), jnp.float32)
+    v_pool = jax.random.normal(ks[4], (nblk, bs, kh, dh), jnp.float32)
+    tables = jax.random.permutation(
+        ks[5], jnp.arange(1, nblk))[:b * npre].reshape(b, npre)
+    k_scale = v_scale = None
+    if quantized:
+        def quant(pool):
+            sc = jnp.max(jnp.abs(pool), axis=(1, 3)) / 127.0
+            sc = jnp.where(sc > 0, sc, 1.0)
+            codes = jnp.round(pool / sc[:, None, :, None])
+            return jnp.clip(codes, -127, 127).astype(jnp.int8), sc
+        k_pool, k_scale = quant(k_pool)
+        v_pool, v_scale = quant(v_pool)
+    return q, k_suf, v_suf, k_pool, v_pool, tables, k_scale, v_scale
+
+
 @workload(
     "kernels",
-    analog="Pallas kernel microbench (flash attention, rmsnorm)",
-    space=Space({"case": ["flash_b1_s256", "flash_b2_s512", "rmsnorm"],
+    analog="Pallas kernel microbench (flash attention, rmsnorm, "
+           "paged prefill)",
+    space=Space({"case": ["flash_b1_s256", "flash_b2_s512", "rmsnorm",
+                          "paged_prefill", "paged_prefill_int8"],
                  "impl": ["xla", "pallas"]}),
-    smoke={"case": ["flash_b1_s256", "rmsnorm"]},
+    smoke={"case": ["flash_b1_s256", "rmsnorm", "paged_prefill",
+                    "paged_prefill_int8"]},
     tags=("kernels", "smoke", "full"),
-    result_columns=["case", "impl", "us", "interpret"],
+    result_columns=["case", "impl", "us", "max_err", "interpret"],
     primary_metric="us",
     # interpret-mode microsecond timings on shared CPU hosts swing up to
     # ~10x run-to-run; absolute time is not gateable here (the docstring's
@@ -50,6 +86,32 @@ def build(pt, ctx):
     """Pallas-vs-XLA kernel timing sweep."""
     case, impl = pt["case"], pt["impl"]
     interpret = impl == "pallas"   # no compiled Pallas backend on CPU
+    if case.startswith("paged_prefill"):
+        quantized = case.endswith("int8")
+        (q, k_suf, v_suf, k_pool, v_pool, tables, k_sc, v_sc) = ctx.memo(
+            ("kernels_paged_prefill", quantized),
+            lambda: _paged_prefill_inputs(quantized))
+
+        def fn():
+            return ops.paged_prefill_attention(
+                q, k_suf, v_suf, k_pool, v_pool, tables, impl=impl,
+                interpret=interpret, k_scale=k_sc, v_scale=v_sc)
+
+        def run():
+            m = ctx.measure(fn, iters=2 if interpret else 3, power=False)
+            out = {"us": m.us, "seconds": m.seconds,
+                   "interpret": int(interpret)}
+            if impl == "pallas":
+                # pallas rows carry their oracle delta so the
+                # BENCH_kernels table is self-verifying: the xla rows
+                # ARE paged_prefill_attention_ref
+                oracle = ops.paged_prefill_attention(
+                    q, k_suf, v_suf, k_pool, v_pool, tables, impl="xla",
+                    k_scale=k_sc, v_scale=v_sc)
+                out["max_err"] = float(jnp.max(jnp.abs(fn() - oracle)))
+            return out
+
+        return {"run": run}
     if case == "rmsnorm":
         x, sc = ctx.memo("kernels_rmsnorm", lambda: (
             jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32),

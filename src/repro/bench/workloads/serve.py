@@ -25,7 +25,15 @@ block-granular preemption backing decode growth), so
 ~1.0 here, where every prompt fits one chunk; the serve_slo workload's
 ``long_prefill`` trace is where it separates. Chunked requires the
 paged cache (the Space constraint drops chunked x slotted cells
-outright, so the grid carries no skip records). All cells share the
+outright, so the grid carries no skip records). ``kv_dtype`` flips the
+paged pool to int8 blocks with per-block-per-head scales (continuous
+paged cells only): ``pool_bytes``/``max_concurrency`` carry the
+capacity win (same block count at ~half the bytes, so ~2x the
+worst-case-length requests per fp byte budget), ``speedup_vs_fp_kv``
+and ``wh_per_token_vs_fp_kv`` the perf/energy deltas, and
+``kv_stream_prefix_agreement`` the token-stream quality vs the fp32
+twin's greedy streams (1.0 on the reduced config — quantization noise
+below the argmax margin). All cells share the
 batched-prefill + fused-decode serve loop. On CPU the paged
 cells run the XLA gather path of ``kernels.ops.paged_decode_attention``;
 set ``REPRO_PAGED_IMPL=pallas-interpret`` to push every decode step
@@ -67,13 +75,15 @@ def _paged_impl() -> tuple[str, bool]:
     return "xla", False
 
 
-def _engine(ctx, arch: str, n_slots: int, cache: str) -> ServeEngine:
+def _engine(ctx, arch: str, n_slots: int, cache: str,
+            kv_dtype: str = "fp32") -> ServeEngine:
     def make():
         c = get_config(arch).reduced()
         params = lm.init(jax.random.key(SEED), c)
         impl, interpret = _paged_impl()
         engine = ServeEngine(c, params, n_slots=n_slots, max_len=MAX_LEN,
                              cache=cache, block_size=BLOCK_SIZE,
+                             kv_dtype=kv_dtype,
                              paged_impl=impl, paged_interpret=interpret,
                              power_methods=ctx.power_methods)
         # warmup: compile every serve program (prompt-bucket prefill,
@@ -83,7 +93,27 @@ def _engine(ctx, arch: str, n_slots: int, cache: str) -> ServeEngine:
         engine.warmup(prompt_len=PROMPT_LEN)
         return c, engine
 
-    return ctx.memo(("serve", arch, n_slots, cache), make)
+    return ctx.memo(("serve", arch, n_slots, cache, kv_dtype), make)
+
+
+def stream_agreement(ref_streams: dict, cur_streams: dict) -> float:
+    """Mean longest-common-prefix fraction of per-request token streams
+    against the reference run: 1.0 = bit-identical generation, lower =
+    quantization (or a scheduler bug) steered greedy decoding off the
+    reference trajectory at 1-lcp/len of the way through an average
+    request. Keyed by rid so completion-order differences don't count."""
+    fracs = []
+    for rid, rt in ref_streams.items():
+        ct = cur_streams.get(rid)
+        if ct is None:
+            continue
+        lcp = 0
+        for a, b in zip(rt, ct):
+            if a != b:
+                break
+            lcp += 1
+        fracs.append(lcp / max(len(rt), len(ct), 1))
+    return sum(fracs) / max(len(fracs), 1)
 
 
 @workload(
@@ -93,18 +123,29 @@ def _engine(ctx, arch: str, n_slots: int, cache: str) -> ServeEngine:
                  "rate_hz": [100.0, 400.0],
                  "cache": ["slotted", "paged"],
                  "policy": ["fixed", "continuous"],
+                 # kv_dtype expands before sched, so an int8 cell's fp32
+                 # twin (same sched) is always measured first; int8 only
+                 # exists for the paged continuous cells (quantized
+                 # blocks live in the pool, and the capacity win is a
+                 # continuous-batching story)
+                 "kv_dtype": ["fp32", "int8"],
                  # last axis -> phased expands before chunked for every
                  # cell, so the vs_phased ratio's twin is always cached
                  "sched": ["phased", "chunked"]},
                 constraints=[lambda pt: not (pt["sched"] == "chunked"
-                                             and pt["cache"] == "slotted")]),
+                                             and pt["cache"] == "slotted"),
+                             lambda pt: pt["kv_dtype"] == "fp32"
+                             or (pt["cache"] == "paged"
+                                 and pt["policy"] == "continuous")]),
     smoke={"slots": [4], "rate_hz": [300.0]},
     tags=("serve", "smoke", "full"),
-    result_columns=["arch", "cache", "policy", "sched", "slots", "rate_hz",
+    result_columns=["arch", "cache", "policy", "sched", "kv_dtype",
+                    "slots", "rate_hz",
                     "n_tokens", "decode_tok_s", "ttft_s", "occupancy",
                     "wh_per_token", "wh_per_request", "speedup_vs_fixed",
                     "speedup_vs_slotted", "speedup_vs_phased",
-                    "power_source"],
+                    "pool_bytes", "max_concurrency", "speedup_vs_fp_kv",
+                    "kv_stream_prefix_agreement", "power_source"],
     primary_metric="decode_tok_s",
     # mean TTFT includes queueing, and at fixed-policy 300 Hz the queue
     # depth is set by host speed during admission — run-to-run swings of
@@ -114,7 +155,8 @@ def _engine(ctx, arch: str, n_slots: int, cache: str) -> ServeEngine:
 )
 def build(pt, ctx):
     """Continuous vs fixed batching, slotted vs paged KV, Poisson load."""
-    c, engine = _engine(ctx, pt["arch"], pt["slots"], pt["cache"])
+    c, engine = _engine(ctx, pt["arch"], pt["slots"], pt["cache"],
+                        pt["kv_dtype"])
     n = N_REQUESTS_SMOKE if ctx.smoke else N_REQUESTS
     requests = poisson_requests(n, pt["rate_hz"], c.vocab,
                                 prompt_len=PROMPT_LEN, seed=SEED)
@@ -169,8 +211,39 @@ def build(pt, ctx):
         # gets speedup_vs_fixed: that baseline is measured on demand.
         cells = ctx.cache.setdefault("serve_cells", {})
         cell_key = (pt["arch"], pt["slots"], pt["rate_hz"], pt["cache"],
-                    pt["sched"])
+                    pt["kv_dtype"], pt["sched"])
         cells.setdefault(cell_key, {})[pt["policy"]] = metrics
+        if pt["cache"] == "paged":
+            # structural capacity story: actual pool bytes (int8 blocks +
+            # scales when quantized), what the same block count costs at
+            # the native KV dtype, and how many worst-case-length
+            # requests fit the fp byte budget (see PagedKVCache)
+            metrics["pool_bytes"] = engine._paged.pool_bytes
+            metrics["pool_bytes_fp"] = engine._paged.pool_bytes_fp
+            metrics["max_concurrency"] = engine._paged.max_concurrency
+        # int8 vs fp32 twin: throughput/energy ratios plus the
+        # token-stream quality figure (streams keyed without kv_dtype so
+        # the int8 cell finds its fp32 reference run)
+        streams = ctx.cache.setdefault("serve_streams", {})
+        skey = (pt["arch"], pt["slots"], pt["rate_hz"], pt["cache"],
+                pt["policy"], pt["sched"])
+        my_streams = {r.rid: tuple(r.tokens) for r in out.results}
+        if pt["kv_dtype"] == "fp32":
+            streams[skey] = my_streams
+        else:
+            fp_key = cell_key[:4] + ("fp32",) + cell_key[5:]
+            fp = cells.get(fp_key, {}).get(pt["policy"])
+            if fp is not None:   # absent only under --points filters
+                metrics["speedup_vs_fp_kv"] = (
+                    metrics["decode_tok_s"]
+                    / max(fp["decode_tok_s"], 1e-9))
+                metrics["wh_per_token_vs_fp_kv"] = (
+                    metrics["wh_per_token"]
+                    / max(fp["wh_per_token"], 1e-12))
+            ref = streams.get(skey)
+            if ref is not None:
+                metrics["kv_stream_prefix_agreement"] = stream_agreement(
+                    ref, my_streams)
         if pt["policy"] == "continuous" and not drill:
             fixed = cells[cell_key].get("fixed")
             if fixed is None:
@@ -181,8 +254,9 @@ def build(pt, ctx):
             metrics["speedup_vs_fixed"] = (
                 metrics["decode_tok_s"] / max(fixed["decode_tok_s"], 1e-9))
         if pt["cache"] == "paged":
+            # slotted twin is always fp32 (no quantized slotted cells)
             slot_key = (pt["arch"], pt["slots"], pt["rate_hz"], "slotted",
-                        pt["sched"])
+                        "fp32", pt["sched"])
             slotted = cells.get(slot_key, {}).get(pt["policy"])
             if slotted is not None:   # absent for chunked (no slotted twin)
                 metrics["speedup_vs_slotted"] = (
@@ -190,7 +264,7 @@ def build(pt, ctx):
                     / max(slotted["decode_tok_s"], 1e-9))
         if pt["sched"] == "chunked":
             phase_key = (pt["arch"], pt["slots"], pt["rate_hz"],
-                         pt["cache"], "phased")
+                         pt["cache"], pt["kv_dtype"], "phased")
             phased = cells.get(phase_key, {}).get(pt["policy"])
             if phased is not None:   # absent only under --points filters
                 metrics["speedup_vs_phased"] = (

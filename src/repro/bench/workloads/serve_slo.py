@@ -45,6 +45,12 @@ tests/test_chunked_serve.py pins). ``preemptions`` counts chunked
 eviction events (nonzero only on the oversubscribed long_prefill
 cells).
 
+The ``kv_dtype`` axis rides the plain-paged phased cells only (the
+serve workload owns the full int8 cross): same traces and SLOs on an
+int8-quantized pool, with ``pool_bytes``/``max_concurrency`` carrying
+the capacity story and ``kv_stream_prefix_agreement`` the stream
+quality vs the fp32 twin.
+
 SLO targets are deliberately generous for the reduced-config CPU cell
 (~10x steady-state latency): goodput sits at 1.0 and acts as a canary —
 only a scheduler stall or admission bug pushes it down — while the
@@ -65,7 +71,7 @@ from repro.serve.engine import ServeEngine
 from repro.serve.slo import SLO, evaluate_slo
 from repro.serve.traffic import TRACE_NAMES, generate_trace, preset_trace
 
-from repro.bench.workloads.serve import _paged_impl
+from repro.bench.workloads.serve import _paged_impl, stream_agreement
 
 MAX_LEN = 96            # slot capacity (prompt + budget; see traffic presets)
 BLOCK_SIZE = 16         # paged KV block; shared_prefix pins 3 full blocks
@@ -103,7 +109,7 @@ def _stream_hash(results) -> str:
 
 
 def _engine(ctx, arch: str, cache: str,
-            n_blocks=None) -> ServeEngine:
+            n_blocks=None, kv_dtype: str = "fp32") -> ServeEngine:
     def make():
         c = get_config(arch).reduced()
         params = lm.init(jax.random.key(SEED), c)
@@ -112,11 +118,12 @@ def _engine(ctx, arch: str, cache: str,
                              cache="paged", block_size=BLOCK_SIZE,
                              n_blocks=n_blocks,
                              prefix_cache=cache == "paged+prefix",
+                             kv_dtype=kv_dtype,
                              paged_impl=impl, paged_interpret=interpret,
                              power_methods=ctx.power_methods)
         return c, engine
 
-    return ctx.memo(("serve_slo", arch, cache, n_blocks), make)
+    return ctx.memo(("serve_slo", arch, cache, n_blocks, kv_dtype), make)
 
 
 @workload(
@@ -125,17 +132,30 @@ def _engine(ctx, arch: str, cache: str,
            "(MLPerf-Power style), prefix-cached prefill",
     space=Space({"arch": ["llama3.2-3b"], "trace": list(TRACE_NAMES),
                  "cache": ["paged", "paged+prefix"],
+                 # int8 pools ride only the plain-paged phased cells
+                 # here: the SLO grid is already trace x cache x sched,
+                 # and the serve workload owns the full kv_dtype cross —
+                 # this axis just shows the quantized pool under
+                 # multi-tenant SLO scoring (fp32 expands first, so the
+                 # int8 cell's twin is cached)
+                 "kv_dtype": ["fp32", "int8"],
                  # last axis -> phased expands before chunked for every
                  # cell, so the vs_phased ratio's twin is always cached
-                 "sched": ["phased", "chunked"]}),
+                 "sched": ["phased", "chunked"]},
+                constraints=[lambda pt: pt["kv_dtype"] == "fp32"
+                             or (pt["cache"] == "paged"
+                                 and pt["sched"] == "phased")]),
     smoke={"trace": ["poisson", "shared_prefix", "long_prefill"]},
     tags=("serve", "smoke", "full"),
-    result_columns=["arch", "trace", "cache", "sched", "goodput",
+    result_columns=["arch", "trace", "cache", "sched", "kv_dtype",
+                    "goodput",
                     "ttft_p99", "tpot_p99", "wh_per_slo_request",
                     "decode_tok_s", "prefix_hit_requests", "preemptions",
                     "ttft_p99_vs_paged", "wh_per_slo_vs_paged",
                     "ttft_p99_vs_phased", "goodput_vs_phased",
-                    "speedup_vs_phased", "trace_hash", "power_source"],
+                    "speedup_vs_phased", "pool_bytes", "max_concurrency",
+                    "speedup_vs_fp_kv", "kv_stream_prefix_agreement",
+                    "trace_hash", "power_source"],
     primary_metric="goodput",
     # Tail quantiles from a SINGLE smoke run are scheduling-event-sized
     # (one GC pause or admission stall lands straight in p99): two
@@ -153,7 +173,8 @@ def _engine(ctx, arch: str, cache: str,
 def build(pt, ctx):
     """Multi-tenant traces x prefix caching, scored against SLOs."""
     c, engine = _engine(ctx, pt["arch"], pt["cache"],
-                        n_blocks=POOL_BY_TRACE.get(pt["trace"]))
+                        n_blocks=POOL_BY_TRACE.get(pt["trace"]),
+                        kv_dtype=pt["kv_dtype"])
     n = N_REQUESTS_SMOKE if ctx.smoke else N_REQUESTS
     cfg = preset_trace(pt["trace"], n_requests=n, vocab=c.vocab, seed=SEED)
     requests = generate_trace(cfg)
@@ -165,7 +186,8 @@ def build(pt, ctx):
     # (bucket, depth) program on the second. The index is cleared
     # afterwards, so measured runs start cold either way.
     warmed = ctx.cache.setdefault("slo_warmed", set())
-    wkey = (pt["arch"], pt["cache"], pt["trace"], pt["sched"])
+    wkey = (pt["arch"], pt["cache"], pt["trace"], pt["sched"],
+            pt["kv_dtype"])
     if wkey not in warmed:
         engine.warmup(requests=requests,
                       repeat=2 if engine.prefix_cache else 1,
@@ -230,11 +252,17 @@ def build(pt, ctx):
         # headline ratios against the twin cells: plain-paged (same
         # sched) and phased (same cache) — both expand earlier in the
         # Space, so they are already measured except under --points
+        # structural pool capacity columns (every cell here is paged)
+        metrics["pool_bytes"] = engine._paged.pool_bytes
+        metrics["pool_bytes_fp"] = engine._paged.pool_bytes_fp
+        metrics["max_concurrency"] = engine._paged.max_concurrency
         cells = ctx.cache.setdefault("serve_slo_cells", {})
         cell_key = (pt["arch"], pt["trace"])
-        cells.setdefault(cell_key, {})[(pt["cache"], pt["sched"])] = metrics
+        sub_key = (pt["cache"], pt["kv_dtype"], pt["sched"])
+        cells.setdefault(cell_key, {})[sub_key] = metrics
         if pt["cache"] == "paged+prefix":
-            base = cells[cell_key].get(("paged", pt["sched"]))
+            base = cells[cell_key].get(
+                ("paged", pt["kv_dtype"], pt["sched"]))
             if base is not None:   # absent only under --points filters
                 metrics["ttft_p99_vs_paged"] = (
                     metrics["ttft_p99"] / max(base["ttft_p99"], 1e-9))
@@ -242,7 +270,8 @@ def build(pt, ctx):
                     metrics["wh_per_slo_request"]
                     / max(base["wh_per_slo_request"], 1e-12))
         if pt["sched"] == "chunked":
-            base = cells[cell_key].get((pt["cache"], "phased"))
+            base = cells[cell_key].get(
+                (pt["cache"], pt["kv_dtype"], "phased"))
             if base is not None:   # absent only under --points filters
                 metrics["ttft_p99_vs_phased"] = (
                     metrics["ttft_p99"] / max(base["ttft_p99"], 1e-9))
@@ -251,6 +280,26 @@ def build(pt, ctx):
                 metrics["speedup_vs_phased"] = (
                     metrics["decode_tok_s"]
                     / max(base["decode_tok_s"], 1e-9))
+        # int8 vs fp32 twin: perf/energy ratios + stream quality (same
+        # protocol as the serve workload; streams keyed sans kv_dtype)
+        streams = ctx.cache.setdefault("serve_slo_streams", {})
+        skey = (pt["arch"], pt["trace"], pt["cache"], pt["sched"])
+        my_streams = {r.rid: tuple(r.tokens) for r in out.results}
+        if pt["kv_dtype"] == "fp32":
+            streams[skey] = my_streams
+        else:
+            base = cells[cell_key].get((pt["cache"], "fp32", pt["sched"]))
+            if base is not None:   # absent only under --points filters
+                metrics["speedup_vs_fp_kv"] = (
+                    metrics["decode_tok_s"]
+                    / max(base["decode_tok_s"], 1e-9))
+                metrics["wh_per_slo_vs_fp_kv"] = (
+                    metrics["wh_per_slo_request"]
+                    / max(base["wh_per_slo_request"], 1e-12))
+            ref = streams.get(skey)
+            if ref is not None:
+                metrics["kv_stream_prefix_agreement"] = stream_agreement(
+                    ref, my_streams)
         return metrics
 
     return {"serve_slo": run_cell}

@@ -23,7 +23,11 @@ TPU-native design (mirrors ``flash_attention.py``):
     (no MXU work); unowned table columns point at the trash block 0, so
     the skipped DMA cannot fault. Masking inside the boundary block is
     positional (``kpos < length``), with the optional sliding window
-    applied the same way as the slotted path.
+    applied the same way as the slotted path;
+  - int8 KV pools dequantize inside the load: per-block-per-head
+    symmetric scales ``(n_blocks, Kh)`` ride in as (1, 1) blocks
+    addressed by the same table lookup, and ``k * scale`` happens on the
+    VMEM tile — fp KV is never materialized anywhere.
 
 Validated against ``kernels.ref.paged_decode_attention_ref`` in
 interpret mode (tests sweep block sizes, GQA groups, ragged lengths and
@@ -42,9 +46,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale: float, bs: int, nb: int,
-                   window: Optional[int]):
+def _decode_kernel(tables_ref, lengths_ref, *refs, scale: float, bs: int,
+                   nb: int, window: Optional[int], quantized: bool):
+    if quantized:
+        (q_ref, k_ref, v_ref, ksc_ref, vsc_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -63,6 +71,8 @@ def _decode_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, Dh)
         k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, Dh)
+        if quantized:
+            k = k * ksc_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bs)
         kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = kpos < length
@@ -75,6 +85,8 @@ def _decode_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         alpha = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
         v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, Dh)
+        if quantized:
+            v = v * vsc_ref[0, 0]
         pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
         acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
         m_scr[...] = m_new
@@ -89,32 +101,49 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            tables: jax.Array, lengths: jax.Array, *,
                            window: Optional[int] = None,
                            scale: Optional[float] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            interpret: bool = False) -> jax.Array:
     """q: (B, H, Dh); k/v_pool: (n_blocks, bs, Kh, Dh); tables: (B, nb)
     int32 physical block ids; lengths: (B,) int32 KV length per sequence
-    including the current token. Returns (B, H, Dh)."""
+    including the current token. ``k_scale``/``v_scale`` (n_blocks, Kh)
+    f32 mark an int8 pool — blocks dequantize on their VMEM tile, fp KV
+    is never materialized. Returns (B, H, Dh)."""
     b, h, dh = q.shape
     bs, kh = k_pool.shape[1], k_pool.shape[2]
     assert h % kh == 0, (h, kh)
+    assert (k_scale is None) == (v_scale is None)
     g = h // kh
     nb = tables.shape[1]
     scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    quantized = k_scale is not None
 
     kernel = functools.partial(_decode_kernel, scale=scale, bs=bs, nb=nb,
-                               window=window)
+                               window=window, quantized=quantized)
 
     def kv_index(bi, khi, j, tables_ref, lengths_ref):
         return (tables_ref[bi, j], 0, khi, 0)
 
+    def scale_index(bi, khi, j, tables_ref, lengths_ref):
+        return (tables_ref[bi, j], khi)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, dh),
+                     lambda bi, khi, j, tr, lr: (bi, khi, 0, 0)),
+        pl.BlockSpec((1, bs, 1, dh), kv_index),
+        pl.BlockSpec((1, bs, 1, dh), kv_index),
+    ]
+    operands = [q.reshape(b, kh, g, dh), k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), scale_index),
+                     pl.BlockSpec((1, 1), scale_index)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kh, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh),
-                         lambda bi, khi, j, tr, lr: (bi, khi, 0, 0)),
-            pl.BlockSpec((1, bs, 1, dh), kv_index),
-            pl.BlockSpec((1, bs, 1, dh), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dh),
                                lambda bi, khi, j, tr, lr: (bi, khi, 0, 0)),
         scratch_shapes=[
@@ -128,6 +157,5 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), q.dtype),
         interpret=interpret,
-    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q.reshape(b, kh, g, dh), k_pool, v_pool)
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
     return out.reshape(b, h, dh)

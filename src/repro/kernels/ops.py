@@ -15,7 +15,17 @@ Selection map (who runs what, where):
                          measures); ``impl="pallas"`` walks the table
                          with scalar-prefetch DMA — the TPU deployment
                          path, validated on CPU via ``interpret=True``.
+  paged_prefill_attention the serve *prefill* hot path: a chunk of Q
+                         positions vs [the slot's paged prefix blocks ++
+                         the chunk's own suffix KV]. Same xla/pallas
+                         split; the xla path is bit-compatible with the
+                         engine's dense phased prefill (the serve stream
+                         contract).
   rmsnorm                elementwise; same pallas/xla split.
+
+Both paged ops accept optional ``k_scale``/``v_scale`` (n_blocks, Kh)
+f32 marking an int8-quantized pool; dequant happens inside the kernel's
+KV load (pallas) or right after the gather (xla ref).
 """
 from __future__ import annotations
 
@@ -30,6 +40,9 @@ from repro.kernels.decode_attention import (
     paged_decode_attention as _paged_decode_pallas,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.prefill_attention import (
+    paged_prefill_attention as _paged_prefill_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 
 
@@ -57,18 +70,49 @@ def flash_attention(q, k, v, *, causal: bool = True,
 @partial(jax.jit, static_argnames=("window", "impl", "interpret"))
 def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
                            window: Optional[int] = None, impl: str = "pallas",
-                           interpret: bool = False):
+                           interpret: bool = False, k_scale=None,
+                           v_scale=None):
     """Single-token GQA decode over a paged KV pool.
 
     q: (B, H, Dh); k/v_pool: (n_blocks, bs, Kh, Dh); tables: (B, nb)
     int32 physical block ids (position order, trash block 0 for unowned
     columns); lengths: (B,) int32 KV length incl. the current token.
+    k/v_scale: optional (n_blocks, Kh) f32 int8-pool scales.
     """
     if impl == "xla":
         return ref.paged_decode_attention_ref(q, k_pool, v_pool, tables,
-                                              lengths, window=window)
+                                              lengths, window=window,
+                                              k_scale=k_scale,
+                                              v_scale=v_scale)
     return _paged_decode_pallas(q, k_pool, v_pool, tables, lengths,
-                                window=window, interpret=interpret)
+                                window=window, k_scale=k_scale,
+                                v_scale=v_scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "impl", "interpret",
+                                   "block_q", "block_k"))
+def paged_prefill_attention(q, k_suffix, v_suffix, k_pool, v_pool, tables, *,
+                            window: Optional[int] = None,
+                            impl: str = "pallas", interpret: bool = False,
+                            block_q: int = 128, block_k: int = 128,
+                            k_scale=None, v_scale=None):
+    """Chunk-of-queries causal GQA attention over [paged prefix ++ own
+    suffix KV].
+
+    q: (B, Sq, H, Dh); k/v_suffix: (B, Sq, Kh, Dh); k/v_pool:
+    (n_blocks, bs, Kh, Dh); tables: (B, npre) int32 prefix block ids in
+    position order (queries sit at global positions npre*bs + i).
+    k/v_scale: optional (n_blocks, Kh) f32 int8-pool scales.
+    """
+    if impl == "xla":
+        return ref.paged_prefill_attention_ref(q, k_suffix, v_suffix,
+                                               k_pool, v_pool, tables,
+                                               window=window, k_scale=k_scale,
+                                               v_scale=v_scale)
+    return _paged_prefill_pallas(q, k_suffix, v_suffix, k_pool, v_pool,
+                                 tables, window=window, k_scale=k_scale,
+                                 v_scale=v_scale, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("impl", "interpret", "eps"))

@@ -37,11 +37,25 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, sq, h, dh).astype(q.dtype)
 
 
+def dequantize_pool(pool: jax.Array, tables: jax.Array,
+                    pool_scale: Optional[jax.Array]) -> jax.Array:
+    """Gather ``pool[tables]`` -> (B, nb, bs, Kh, Dh) f32, applying the
+    per-block-per-head symmetric scales ``(n_blocks, Kh)`` when the pool
+    is int8-quantized (``pool_scale`` given)."""
+    g = pool[tables].astype(jnp.float32)
+    if pool_scale is not None:
+        g = g * pool_scale[tables][:, :, None, :, None].astype(jnp.float32)
+    return g
+
+
 def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, tables: jax.Array,
                                lengths: jax.Array, *,
                                window: Optional[int] = None,
-                               scale: Optional[float] = None) -> jax.Array:
+                               scale: Optional[float] = None,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
+                               ) -> jax.Array:
     """Single-token GQA decode attention over a paged KV pool.
 
     q:      (B, H, Dh)        — one query token per sequence;
@@ -58,14 +72,19 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     query), additionally kpos > length-1-window when windowed. fp32
     softmax; returns (B, H, Dh) in q.dtype. This is the semantics oracle
     the Pallas kernel (kernels/decode_attention.py) must match.
+
+    ``k_scale``/``v_scale`` (n_blocks, Kh) f32 mark an int8-quantized
+    pool: blocks dequantize (symmetric, per block per KV head) right
+    after the gather — the XLA stand-in for the kernel's in-VMEM
+    dequant.
     """
     b, h, dh = q.shape
     nb = tables.shape[1]
     bs, kh = k_pool.shape[1], k_pool.shape[2]
     g = h // kh
     scale = scale if scale is not None else 1.0 / (dh ** 0.5)
-    k = k_pool[tables].reshape(b, nb * bs, kh, dh).astype(jnp.float32)
-    v = v_pool[tables].reshape(b, nb * bs, kh, dh).astype(jnp.float32)
+    k = dequantize_pool(k_pool, tables, k_scale).reshape(b, nb * bs, kh, dh)
+    v = dequantize_pool(v_pool, tables, v_scale).reshape(b, nb * bs, kh, dh)
     qf = q.astype(jnp.float32).reshape(b, kh, g, dh) * scale
     scores = jnp.einsum("bkgd,btkd->bkgt", qf, k)
     kpos = jnp.arange(nb * bs)[None, :]
@@ -76,6 +95,74 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", w, v)
     return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q: jax.Array, k_suffix: jax.Array,
+                                v_suffix: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, tables: jax.Array, *,
+                                window: Optional[int] = None,
+                                scale: Optional[float] = None,
+                                k_scale: Optional[jax.Array] = None,
+                                v_scale: Optional[jax.Array] = None
+                                ) -> jax.Array:
+    """Chunk-of-queries causal GQA attention over [paged prefix ++ own
+    suffix KV] — the oracle for ``kernels/prefill_attention.py``.
+
+    q:          (B, Sq, H, Dh)  — the chunk's queries, sitting at global
+                positions ``pos_offset + i`` with
+                ``pos_offset = npre * bs`` (prefixes are whole blocks);
+    k/v_suffix: (B, Sq, Kh, Dh) — the chunk's own freshly projected KV;
+    k/v_pool:   (n_blocks, bs, Kh, Dh) — the shared pool holding the
+                prefix blocks (int8 when ``k_scale``/``v_scale``
+                (n_blocks, Kh) f32 are given — dequantized here right
+                after the gather);
+    tables:     (B, npre) int32 — each row's prefix block ids in
+                position order (all real tokens: prefixes are full,
+                block-aligned).
+
+    The mask/softmax numerics below deliberately REPLICATE
+    ``models.attention.sdpa`` (impl="repeat", the serve engine's
+    prefill impl) on the concatenated dense view, cast for cast: on fp
+    pools the engine's chunked / prefix-hit prefill must produce token
+    streams bit-identical to the dense phased path (the serve stream
+    contract gated by tests/test_chunked_serve.py and
+    scripts/check_ttft_gate.py). Do not "simplify" to the
+    flash_attention_ref formulation — it is numerically close but not
+    bit-equal.
+    """
+    b, sq, h, dh = q.shape
+    npre = tables.shape[1]
+    bs, kh = k_pool.shape[1], k_pool.shape[2]
+    pos_offset = npre * bs
+    native = k_suffix.dtype
+    pk = dequantize_pool(k_pool, tables, k_scale)
+    pv = dequantize_pool(v_pool, tables, v_scale)
+    k = jnp.concatenate([pk.reshape(b, pos_offset, kh, dh).astype(native),
+                         k_suffix], axis=1)
+    v = jnp.concatenate([pv.reshape(b, pos_offset, kh, dh).astype(native),
+                         v_suffix], axis=1)
+    t = pos_offset + sq
+    if scale is None:
+        sc = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32)).astype(q.dtype)
+    else:
+        sc = jnp.asarray(scale, jnp.float32).astype(q.dtype)
+    qs = q * sc
+    if h != kh:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jax.lax.optimization_barrier(
+        jnp.einsum("bshk,bthk->bhst", qs, k)).astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + pos_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    neg_inf = float(jnp.finfo(jnp.float32).min)
+    scores = scores + jnp.where(mask, 0.0, neg_inf).astype(jnp.float32)[
+        None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthk->bshk", w, v)
 
 
 def rmsnorm_ref(x: jax.Array, scale: jax.Array,

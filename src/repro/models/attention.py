@@ -295,7 +295,8 @@ def encoder_kv(c: ModelConfig, p: Params, enc_out: jax.Array):
 def prefill_attention(c: ModelConfig, p: Params, x: jax.Array, *,
                       positions: Optional[jax.Array] = None,
                       impl: str = "repeat", unroll: bool = False,
-                      prefix_kv: Optional[tuple] = None):
+                      prefix_kv: Optional[tuple] = None,
+                      paged_prefix: Optional[tuple] = None):
     """Causal self-attention that also returns the K/V cache.
 
     ``prefix_kv`` = (pk, pv), each (B, T_pre, Kh, Dh): precomputed KV of
@@ -305,11 +306,26 @@ def prefill_attention(c: ModelConfig, p: Params, x: jax.Array, *,
     attend over [prefix KV ++ suffix KV] under the causal mask shifted
     by ``q_offset=T_pre``. Only the suffix (k, v) is returned for the
     cache — the prefix blocks already live in the pool.
+
+    ``paged_prefix`` = (k_pool, v_pool, k_scale, v_scale, tables,
+    paged_impl, paged_interpret): same semantics, but the prefix KV
+    stays IN the paged pool — ``kernels.ops.paged_prefill_attention``
+    walks the slot's block table directly (scales non-None mark an int8
+    pool, dequantized inside the kernel's KV load). Replaces the dense
+    ``k_pool[tables]`` gather the engine used to do.
     """
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)[None, :]
     q, k, v = qkv_proj(c, p, x, positions if c.use_rope else None)
+    assert prefix_kv is None or paged_prefix is None
+    if paged_prefix is not None:
+        from repro.kernels import ops as _kops
+        k_pool, v_pool, k_scale, v_scale, tables, pimpl, pinterp = paged_prefix
+        out = _kops.paged_prefill_attention(
+            q, k, v, k_pool, v_pool, tables, window=c.attn_window,
+            impl=pimpl, interpret=pinterp, k_scale=k_scale, v_scale=v_scale)
+        return out_proj(p, out.astype(q.dtype)), (k, v)
     if prefix_kv is not None:
         pk, pv = prefix_kv
         t_pre = pk.shape[1]
@@ -324,13 +340,38 @@ def prefill_attention(c: ModelConfig, p: Params, x: jax.Array, *,
     return out, (k, v)
 
 
+def _quantized_block_write(pool: jax.Array, scale: jax.Array,
+                           new: jax.Array, blk: jax.Array, off: jax.Array):
+    """Write one token (B, Kh, Dh) into int8 pool blocks at
+    ``(blk[b], off[b])``, preserving the per-(block, head) symmetric
+    scale invariant: dequantize the owning block, place the token,
+    re-quantize under ``max(old_scale, maxabs(new)/127)``. The scale is
+    MONOTONE, so when the new token fits the old range the block's other
+    int8 codes are bit-unchanged (round(i*s/s) == i). Duplicate ``blk``
+    entries only ever occur on the trash block 0 (idle slots), where the
+    undefined scatter order is harmless."""
+    newf = new.astype(jnp.float32)
+    osc = jnp.take(scale, blk, axis=0).astype(jnp.float32)       # (B, Kh)
+    deq = jnp.take(pool, blk, axis=0).astype(jnp.float32) \
+        * osc[:, None, :, None]                                  # (B,bs,Kh,Dh)
+    rows = jnp.arange(new.shape[0])
+    deq = deq.at[rows, off].set(newf)
+    nsc = jnp.maximum(osc, jnp.max(jnp.abs(newf), axis=-1) / 127.0)
+    q = jnp.round(deq / jnp.where(nsc > 0.0, nsc, 1.0)[:, None, :, None])
+    q = jnp.clip(q, -127, 127).astype(pool.dtype)
+    return (pool.at[blk].set(q, mode="drop"),
+            scale.at[blk].set(nsc.astype(scale.dtype), mode="drop"))
+
+
 def decode_attention(c: ModelConfig, p: Params, x: jax.Array,
                      cache_k: jax.Array, cache_v: jax.Array,
                      pos: jax.Array, *, impl: str = "grouped",
                      block_tables: Optional[jax.Array] = None,
                      n_kv_blocks: Optional[int] = None,
                      paged_impl: str = "xla",
-                     paged_interpret: bool = False):
+                     paged_interpret: bool = False,
+                     cache_k_scale: Optional[jax.Array] = None,
+                     cache_v_scale: Optional[jax.Array] = None):
     """One-token decode against a fixed-size KV cache.
 
     x: (B, 1, D); cache_k/v: (B, T, Kh, Dh); pos: scalar int32 (step
@@ -354,6 +395,11 @@ def decode_attention(c: ModelConfig, p: Params, x: jax.Array,
     length — never the ``max_len``-padded row. ``pos`` must be the
     per-slot vector; idle slots park at a position whose table column is
     the trash block 0.
+
+    ``cache_k_scale``/``cache_v_scale`` (n_blocks, Kh) f32 mark an int8
+    pool: the token write goes through :func:`_quantized_block_write`
+    and the return value grows to a 5-tuple
+    ``(out, cache_k, cache_v, cache_k_scale, cache_v_scale)``.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -369,16 +415,27 @@ def decode_attention(c: ModelConfig, p: Params, x: jax.Array,
         blk = jnp.take_along_axis(block_tables, pos[:, None] // bs_blk,
                                   axis=1)[:, 0]
         off = pos % bs_blk
-        cache_k = cache_k.at[blk, off].set(
-            k_new[:, 0].astype(cache_k.dtype), mode="drop")
-        cache_v = cache_v.at[blk, off].set(
-            v_new[:, 0].astype(cache_v.dtype), mode="drop")
+        quantized = cache_k_scale is not None
+        if quantized:
+            cache_k, cache_k_scale = _quantized_block_write(
+                cache_k, cache_k_scale, k_new[:, 0], blk, off)
+            cache_v, cache_v_scale = _quantized_block_write(
+                cache_v, cache_v_scale, v_new[:, 0], blk, off)
+        else:
+            cache_k = cache_k.at[blk, off].set(
+                k_new[:, 0].astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[blk, off].set(
+                v_new[:, 0].astype(cache_v.dtype), mode="drop")
         cache_k = _hint(cache_k, "cache_spec")
         cache_v = _hint(cache_v, "cache_spec")
         out = _kops.paged_decode_attention(
             q[:, 0], cache_k, cache_v, block_tables[:, :nb], pos + 1,
-            window=c.attn_window, impl=paged_impl, interpret=paged_interpret)
-        return out_proj(p, out[:, None].astype(q.dtype)), cache_k, cache_v
+            window=c.attn_window, impl=paged_impl, interpret=paged_interpret,
+            k_scale=cache_k_scale, v_scale=cache_v_scale)
+        out = out_proj(p, out[:, None].astype(q.dtype))
+        if quantized:
+            return out, cache_k, cache_v, cache_k_scale, cache_v_scale
+        return out, cache_k, cache_v
 
     if per_slot:
         # independent write position per batch row (slot): row scatter

@@ -170,7 +170,9 @@ def stack_forward(c: ModelConfig, layers: Params, x: jax.Array, *,
 
 def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
                   impl: str = "repeat", positions=None, enc_kv_stacked=None,
-                  prefix_kv=None, unroll: bool = False):
+                  prefix_kv=None, paged_prefix=None, paged_tables=None,
+                  paged_impl: str = "xla", paged_interpret: bool = False,
+                  unroll: bool = False):
     """Full-sequence causal pass that also emits per-layer caches.
 
     ``prefix_kv`` threads per-layer cached-prefix K/V (stacked like the
@@ -179,17 +181,27 @@ def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
     prefill of prefix caching. Attention-only stacks: the SSD
     recurrence/conv state of mamba mixers depends on the whole sequence
     and cannot skip the prefix.
+
+    ``paged_prefix`` is the paged twin: the engine's pool cache tree
+    itself (k/v leaves (n_periods, n_blocks, bs, Kh, Dh), plus
+    k_scale/v_scale when int8) rides the scan as xs while the shared
+    ``paged_tables`` (B, npre) addresses each row's prefix blocks —
+    attention dispatches ``kernels.ops.paged_prefill_attention`` and the
+    dense prefix KV is never gathered out of the pool.
     """
     kinds = slot_kinds(c)
     assert enc_kv_stacked is None or prefix_kv is None
+    assert prefix_kv is None or paged_prefix is None
 
     def body(carry, inp):
         x = carry
-        ekv = pkv = None
+        ekv = pkv = ppx = None
         if enc_kv_stacked is not None:
             period_params, ekv = inp
         elif prefix_kv is not None:
             period_params, pkv = inp
+        elif paged_prefix is not None:
+            period_params, ppx = inp
         else:
             period_params = inp
         caches = {}
@@ -197,14 +209,20 @@ def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
             sp = period_params[f"slot{i}"]
             h = apply_norm(c, sp["norm1"], x)
             if mixer == "attn":
+                pp = None
+                if ppx is not None:
+                    d = ppx[f"slot{i}"]
+                    pp = (d["k"], d["v"], d.get("k_scale"), d.get("v_scale"),
+                          paged_tables, paged_impl, paged_interpret)
                 h, (k, v) = attn.prefill_attention(
                     c, sp["attn"], h, positions=positions,
                     impl=impl, unroll=unroll,
                     prefix_kv=None if pkv is None else
-                    (pkv[f"slot{i}"]["k"], pkv[f"slot{i}"]["v"]))
+                    (pkv[f"slot{i}"]["k"], pkv[f"slot{i}"]["v"]),
+                    paged_prefix=pp)
                 caches[f"slot{i}"] = {"k": k, "v": v}
             else:
-                assert pkv is None, (
+                assert pkv is None and ppx is None, (
                     "prefix caching requires attention-only stacks")
                 h, (conv_tail, hstate) = ssm_mod.mamba_forward(
                     c, sp["mamba"], h, return_state=True, unroll=unroll)
@@ -227,6 +245,8 @@ def stack_prefill(c: ModelConfig, layers: Params, x: jax.Array, *,
         xs = (layers, enc_kv_stacked)
     elif prefix_kv is not None:
         xs = (layers, prefix_kv)
+    elif paged_prefix is not None:
+        xs = (layers, paged_prefix)
     else:
         xs = layers
     x, caches = jax.lax.scan(body, x, xs, unroll=unroll)
@@ -258,14 +278,23 @@ def stack_decode(c: ModelConfig, layers: Params, x: jax.Array, caches: Params,
             sc = cache[f"slot{i}"]
             h = apply_norm(c, sp["norm1"], x)
             if mixer == "attn":
-                h, ck, cv = attn.decode_attention(c, sp["attn"], h,
-                                                  sc["k"], sc["v"], pos,
-                                                  impl=impl,
-                                                  block_tables=block_tables,
-                                                  n_kv_blocks=n_kv_blocks,
-                                                  paged_impl=paged_impl,
-                                                  paged_interpret=paged_interpret)
-                new_cache[f"slot{i}"] = {"k": ck, "v": cv}
+                if "k_scale" in sc:
+                    h, ck, cv, ksc, vsc = attn.decode_attention(
+                        c, sp["attn"], h, sc["k"], sc["v"], pos, impl=impl,
+                        block_tables=block_tables, n_kv_blocks=n_kv_blocks,
+                        paged_impl=paged_impl,
+                        paged_interpret=paged_interpret,
+                        cache_k_scale=sc["k_scale"],
+                        cache_v_scale=sc["v_scale"])
+                    new_cache[f"slot{i}"] = {"k": ck, "v": cv,
+                                             "k_scale": ksc, "v_scale": vsc}
+                else:
+                    h, ck, cv = attn.decode_attention(
+                        c, sp["attn"], h, sc["k"], sc["v"], pos, impl=impl,
+                        block_tables=block_tables, n_kv_blocks=n_kv_blocks,
+                        paged_impl=paged_impl,
+                        paged_interpret=paged_interpret)
+                    new_cache[f"slot{i}"] = {"k": ck, "v": cv}
             else:
                 h, conv_s, ssm_s = ssm_mod.mamba_decode(c, sp["mamba"], h,
                                                         sc["conv"], sc["ssm"])

@@ -136,7 +136,10 @@ def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
             patch_embeds: Optional[jax.Array] = None,
             enc_frames: Optional[jax.Array] = None, impl: str = "repeat",
             unroll: bool = False, last_pos: Optional[jax.Array] = None,
-            prefix_kv: Params = None, pos_offset: int = 0):
+            prefix_kv: Params = None, pos_offset: int = 0,
+            paged_prefix: Params = None,
+            paged_tables: Optional[jax.Array] = None,
+            paged_impl: str = "xla", paged_interpret: bool = False):
     """Process the prompt; return (last-position logits, caches, enc_kv).
 
     ``last_pos`` (B,) int32 overrides which position's logits are
@@ -150,18 +153,30 @@ def prefill(c: ModelConfig, p: Params, tokens: jax.Array, *,
     ``pos_offset``), ``prefix_kv`` is the stacked per-layer K/V of the
     cached ``pos_offset``-token prefix (see ``blocks.stack_prefill``),
     and the returned ``caches`` cover only the suffix.
+
+    ``paged_prefix`` + ``paged_tables`` are the paged twin: the pool
+    cache tree itself and the (B, npre) prefix block table — the prefix
+    KV stays in the pool and attention walks the table via the paged
+    prefill kernel (``paged_impl``/``paged_interpret`` select the
+    xla-ref vs Pallas vs interpret dispatch).
     """
-    assert (prefix_kv is None) == (pos_offset == 0)
+    assert (prefix_kv is None) or (paged_prefix is None)
+    has_prefix = (prefix_kv is not None) or (paged_prefix is not None)
+    assert has_prefix == (pos_offset > 0), (pos_offset,)
     x = _inputs_to_embeds(c, p, tokens, patch_embeds, pos_offset=pos_offset)
     enc_kv = None
     if c.family == "encdec":
         _, enc_kv = encode(c, p, enc_frames, unroll=unroll)
     positions = None
-    if prefix_kv is not None:
+    if has_prefix:
         positions = jnp.arange(tokens.shape[1])[None, :] + pos_offset
     x, caches = blocks.stack_prefill(c, p["layers"], x, impl=impl,
                                      enc_kv_stacked=enc_kv,
                                      prefix_kv=prefix_kv,
+                                     paged_prefix=paged_prefix,
+                                     paged_tables=paged_tables,
+                                     paged_impl=paged_impl,
+                                     paged_interpret=paged_interpret,
                                      positions=positions, unroll=unroll)
     if last_pos is not None:
         x_last = jnp.take_along_axis(

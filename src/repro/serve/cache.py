@@ -212,16 +212,97 @@ def insert_paged_rows(caches: Params, rows: Params, blocks: jax.Array,
     return jax.tree_util.tree_map_with_path(put, caches, rows)
 
 
+def _quantize_block(blk: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization of pool-shaped KV ``(L, n, bs, Kh, Dh)``
+    per (block, KV head): scale = maxabs / 127 over the block's (bs, Dh)
+    slab. Returns (int8 values, f32 scales (L, n, Kh)). Zero slabs (pad
+    rows, untouched blocks) get scale 0 — the dequant guard maps that to
+    exact zeros."""
+    blk = blk.astype(jnp.float32)
+    sc = jnp.max(jnp.abs(blk), axis=(2, 4)) / 127.0
+    q = jnp.round(blk / jnp.where(sc > 0.0, sc, 1.0)[:, :, None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), sc
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("block_size",))
+def insert_paged_prefill(caches: Params, rows: Params, blocks: jax.Array,
+                         slots: jax.Array, *, block_size: int) -> Params:
+    """:func:`insert_paged_rows` that also understands int8 pools.
+
+    When a ``"k"``/``"v"`` leaf has a sibling ``"k_scale"``/``"v_scale"``
+    leaf (the :class:`PagedKVCache` ``kv_dtype="int8"`` layout), the
+    prefill KV is quantized per (block, KV head) on the way in and both
+    the int8 pool blocks and their scales are scattered at
+    ``flat_blocks``. Walked as a dict tree (not ``tree_map``) because
+    ``rows`` — a model prefill result — has no scale leaves.
+    """
+    flat_blocks = blocks.reshape(-1)
+
+    def prep(small):
+        l, kp, s = small.shape[:3]
+        pad = -s % block_size
+        if pad:
+            widths = [(0, 0)] * small.ndim
+            widths[2] = (0, pad)
+            small = jnp.pad(small, widths)
+            s += pad
+        return small.reshape((l, kp * (s // block_size), block_size)
+                             + small.shape[3:])
+
+    def walk(big, small):
+        if not isinstance(big, dict):
+            return big.at[:, slots].set(small.astype(big.dtype), mode="drop")
+        out = {}
+        for key, leaf in big.items():
+            if key in ("k_scale", "v_scale"):
+                continue                    # written with the kv leaf below
+            if key in ("k", "v") and key + "_scale" in big:
+                q, sc = _quantize_block(prep(small[key]))
+                out[key] = leaf.at[:, flat_blocks].set(q, mode="drop")
+                sleaf = big[key + "_scale"]
+                out[key + "_scale"] = sleaf.at[:, flat_blocks].set(
+                    sc.astype(sleaf.dtype), mode="drop")
+            elif key in ("k", "v"):
+                out[key] = leaf.at[:, flat_blocks].set(
+                    prep(small[key]).astype(leaf.dtype), mode="drop")
+            else:
+                out[key] = walk(leaf, small[key])
+        return out
+
+    return walk(caches, rows)
+
+
+def _is_pool(path) -> bool:
+    return getattr(path[-1], "key", None) in ("k", "v", "k_scale", "v_scale")
+
+
+def _add_scale_leaves(tree):
+    """Add a zero ``k_scale``/``v_scale`` leaf ``(L, n_blocks, Kh)`` f32
+    beside every pool-shaped k/v leaf — the int8 pool layout. Scales live
+    in the same per-slot dicts as the blocks they describe, so every
+    existing tree walk (insert, CoW, scan xs) carries them for free."""
+    if not isinstance(tree, dict):
+        return tree
+    out = {k: _add_scale_leaves(v) for k, v in tree.items()}
+    for key in ("k", "v"):
+        leaf = tree.get(key)
+        if leaf is not None and not isinstance(leaf, dict):
+            out[key + "_scale"] = jnp.zeros(
+                (leaf.shape[0], leaf.shape[1], leaf.shape[3]), jnp.float32)
+    return out
+
+
 @partial(jax.jit, donate_argnums=(0,))
 def copy_blocks(caches: Params, src: jax.Array, dst: jax.Array) -> Params:
     """Copy pool blocks ``src[i] -> dst[i]`` on every attention k/v leaf
-    (the copy-on-write arm of prefix sharing). SSM/conv state leaves are
+    — and, on int8 pools, the matching scale leaves, so a CoW'd block
+    dequantizes identically to its parent. SSM/conv state leaves are
     per-slot and pass through. Traced per (len(src),) shape — CoW events
     are rare (a write into a still-shared block), so the handful of
     compiled variants is cheap."""
 
     def cp(path, leaf):
-        if _is_kv(path):
+        if _is_pool(path):
             return leaf.at[:, dst].set(leaf[:, src])
         return leaf
 
@@ -349,6 +430,16 @@ class PagedKVCache:
         rows (they are O(1) per slot — paging buys nothing). The serve
         engine takes ownership of this tree on first use (its jitted
         programs donate it in place) and clears the attribute.
+        ``kv_dtype="int8"`` stores the pool as int8 with per-block-
+        per-head symmetric ``k_scale``/``v_scale`` leaves
+        ``(L, n_blocks, Kh)`` f32 beside it: ~0.51x the bytes of the
+        native (bf16/fp32-free) pool at equal block count, dequantized
+        inside the paged kernels' KV loads. ``kv_dtype="fp32"`` means
+        *unquantized at the model's native cache dtype* — NOT a literal
+        float32 cast, which would break slotted-vs-paged stream
+        bit-identity. ``pool_bytes`` / ``pool_bytes_fp`` /
+        ``max_concurrency`` expose the capacity arithmetic to the bench
+        metrics.
       * ``device_tables()`` — the ``(n_slots, max_blocks)`` int32 block
         table, re-uploaded only after alloc/free changed it.
 
@@ -375,10 +466,12 @@ class PagedKVCache:
 
     def __init__(self, c: ModelConfig, n_slots: int, max_len: int,
                  params: Params, *, block_size: int = 16,
-                 n_blocks: Optional[int] = None):
+                 n_blocks: Optional[int] = None, kv_dtype: str = "fp32"):
         assert max_len % block_size == 0, (max_len, block_size)
+        assert kv_dtype in ("fp32", "int8"), kv_dtype
         self.c, self.n_slots, self.max_len = c, n_slots, max_len
         self.block_size = block_size
+        self.kv_dtype = kv_dtype
         self.max_blocks = max_len // block_size
         total = (1 + n_slots * self.max_blocks) if n_blocks is None \
             else int(n_blocks)
@@ -393,10 +486,35 @@ class PagedKVCache:
         def make(path, leaf):
             if _is_kv(path):
                 shape = ((leaf.shape[0], total, block_size) + leaf.shape[3:])
-                return jnp.zeros(shape, leaf.dtype)
+                dt = jnp.int8 if kv_dtype == "int8" else leaf.dtype
+                return jnp.zeros(shape, dt)
             return jnp.zeros(leaf.shape, leaf.dtype)
 
-        self.caches = jax.tree_util.tree_map_with_path(make, shapes)
+        caches = jax.tree_util.tree_map_with_path(make, shapes)
+        if kv_dtype == "int8":
+            caches = _add_scale_leaves(caches)
+        self.caches = caches
+
+        #: actual pool bytes (k/v blocks + scales when quantized) vs what
+        #: the same block count costs at the model's native KV dtype —
+        #: the capacity story the serve metrics report: at the fp byte
+        #: budget an int8 pool holds ~2x the blocks, so ~2x the
+        #: worst-case-length concurrent requests.
+        self.pool_bytes = 0
+        self.pool_bytes_fp = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+            if _is_pool(path):
+                self.pool_bytes += leaf.size * leaf.dtype.itemsize
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            if _is_kv(path):
+                elems = (leaf.shape[0] * total * block_size
+                         * int(np.prod(leaf.shape[3:])))
+                self.pool_bytes_fp += elems * jnp.dtype(leaf.dtype).itemsize
+        self.bytes_per_block = self.pool_bytes // total
+        # pure-SSM stacks have no attention KV leaves: no pool, no paging
+        # capacity story to tell.
+        self.max_concurrency = n_slots if self.bytes_per_block == 0 else int(
+            self.pool_bytes_fp // (self.max_blocks * self.bytes_per_block))
         self.tables_np = np.zeros((n_slots, self.max_blocks), np.int32)
         self._tables = jnp.asarray(self.tables_np)
         self._dirty = False

@@ -88,8 +88,8 @@ from repro.core.metrics import (
 from repro.core.runner import StragglerWatchdog
 from repro.models import lm
 from repro.serve.cache import (
-    CacheOOM, PagedKVCache, _is_kv, copy_blocks, grow_caches,
-    insert_paged_rows, insert_rows, slotted_cache,
+    CacheOOM, PagedKVCache, copy_blocks, grow_caches,
+    insert_paged_prefill, insert_rows, slotted_cache,
 )
 from repro.serve.requests import Request, RequestResult
 from repro.serve.scheduler import Scheduler, Slot, StepRecord
@@ -173,6 +173,7 @@ class ServeEngine:
                  cache: str = "slotted", block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
+                 kv_dtype: str = "fp32",
                  decode_window: int = 8,
                  sched: str = "phased", chunk_tokens: int = 32,
                  paged_impl: str = "xla", paged_interpret: bool = False,
@@ -186,12 +187,18 @@ class ServeEngine:
         assert sched in ("phased", "chunked"), sched
         assert not prefix_cache or cache == "paged", (
             "prefix caching shares KV blocks — requires the paged cache")
+        assert kv_dtype in ("fp32", "int8"), kv_dtype
+        assert kv_dtype == "fp32" or cache == "paged", (
+            "int8 KV quantizes pool blocks — requires the paged cache")
         self.c, self.params = c, params
         self.n_slots, self.max_len = n_slots, max_len
         self.cache_kind = cache
         self.block_size = block_size
         self._n_blocks = n_blocks
         self.prefix_cache = prefix_cache
+        #: "fp32" = unquantized pool at the model's native cache dtype;
+        #: "int8" = quantized blocks + per-(block, head) scales
+        self.kv_dtype = kv_dtype
         self.decode_window = max(int(decode_window), 1)
         #: default scheduler mode for serve(): "phased" keeps the
         #: admission-wave prefill; "chunked" interleaves chunk_tokens
@@ -267,7 +274,8 @@ class ServeEngine:
             self._paged = PagedKVCache(self.c, self.n_slots, self.max_len,
                                        self.params,
                                        block_size=self.block_size,
-                                       n_blocks=self._n_blocks)
+                                       n_blocks=self._n_blocks,
+                                       kv_dtype=self.kv_dtype)
             if self.prefix_cache:
                 assert self.c.family not in ("ssm", "hybrid"), (
                     "prefix caching skips prefix recompute — impossible "
@@ -306,30 +314,27 @@ class ServeEngine:
 
     def _prefix_prefill_fn(self, bucket: int, npre: int):
         """Suffix-prefill program for prompts whose first ``npre`` blocks
-        hit the prefix index: gathers the cached prefix K/V straight out
-        of the paged pool (per-row block lists, inside the jitted
-        program), prefills only the ``bucket``-padded suffix against it,
-        and returns suffix cache rows. One compiled program per
-        (suffix bucket, prefix depth) pair. The pool is read, never
-        donated — the suffix rows scatter in via ``insert_paged_rows``
-        afterwards, exactly like a cold prefill."""
+        hit the prefix index: the ``bucket``-padded suffix attends
+        against the slot's prefix blocks IN the pool via the paged
+        prefill kernel (``kernels.ops.paged_prefill_attention`` — the
+        per-row block table rides into the program; no dense prefix-KV
+        gather is ever materialized), and suffix cache rows come back.
+        One compiled program per (suffix bucket, prefix depth) pair. The
+        pool is read, never donated — the suffix rows scatter in via
+        ``insert_paged_prefill`` afterwards, exactly like a cold
+        prefill."""
         key = (bucket, npre)
         fn = self._prefix_prefills.get(key)
         if fn is None:
-            c, bs, kp = self.c, self.block_size, self.n_slots
+            c, bs = self.c, self.block_size
             impl = self.impl_prefill
 
             def prefill_hit(params, caches, tokens, last, pre_blocks):
-                def gather(path, leaf):
-                    if not _is_kv(path):
-                        return leaf
-                    g = jnp.take(leaf, pre_blocks.reshape(-1), axis=1)
-                    return g.reshape((leaf.shape[0], kp, npre * bs)
-                                     + leaf.shape[3:])
-                pkv = jax.tree_util.tree_map_with_path(gather, caches)
-                logits, rows, _ = lm.prefill(c, params, tokens, impl=impl,
-                                             last_pos=last, prefix_kv=pkv,
-                                             pos_offset=npre * bs)
+                logits, rows, _ = lm.prefill(
+                    c, params, tokens, impl=impl, last_pos=last,
+                    paged_prefix=caches, paged_tables=pre_blocks,
+                    pos_offset=npre * bs, paged_impl=self.paged_impl,
+                    paged_interpret=self.paged_interpret)
                 first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                 return first, rows
 
@@ -589,7 +594,7 @@ class ServeEngine:
                     self._paged.ensure(slot.index, plen)
                     own = self._paged.block_ids(slot.index, plen)[npre:]
                     blocks[i, :len(own)] = own
-                self.caches = insert_paged_rows(
+                self.caches = insert_paged_prefill(
                     self.caches, rows, jnp.asarray(blocks),
                     jnp.asarray(slot_ids), block_size=self.block_size)
                 if use_prefix:
@@ -723,7 +728,7 @@ class ServeEngine:
             for i, (slot, start, end) in enumerate(entries):
                 own = self._paged.block_ids(slot.index, end)[npre:]
                 blocks[i, :len(own)] = own
-            self.caches = insert_paged_rows(
+            self.caches = insert_paged_prefill(
                 self.caches, rows, jnp.asarray(blocks),
                 jnp.asarray(slot_ids), block_size=self.block_size)
             finals = [(i, slot)
